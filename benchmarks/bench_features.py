@@ -1,0 +1,42 @@
+"""Fig. 19 / Fig. 20: per-feature ablation.
+
+The paper's ladder: TDB (TerarkDB baseline) → TDB-C (+compensated
+compaction) → CR (+lazy read) → CRW (+hotspot-aware write) → CRWL
+(= Scavenger, +GC-lookup separation) → S-A (+adaptive readahead) → S-AD
+(= Scavenger+, +dynamic GC scheduling).
+
+Reports write throughput under a 1.5x space limit (Fig. 19) and space
+amplification without limits (Fig. 20).
+"""
+
+from __future__ import annotations
+
+from .common import (emit, gen_update, loaded_db, make_spec, run_phase,
+                     space_amplification)
+
+LADDER = ["TDB", "TDB-C", "CR", "CRW", "CRWL", "S-A", "S-AD"]
+WORKLOADS = ["fixed-4096", "fixed-16384", "mixed-8k", "pareto-1k"]
+
+
+def run() -> list:
+    rows = []
+    for wl in WORKLOADS:
+        for name in LADDER:
+            # Fig. 19: throughput with 1.5x cap
+            spec = make_spec(wl)
+            db = loaded_db(name, spec, space_limit_x=1.5)
+            r = run_phase(db, "update", gen_update(spec), drain=True)
+            us = 1e6 * r.sim_seconds / max(1, r.ops)
+            rows.append(f"features_capped/{wl}/{name},{us:.2f},"
+                        f"upd_kops={r.kops_per_s:.2f}")
+            # Fig. 20: space amp without cap
+            spec = make_spec(wl)
+            db = loaded_db(name, spec)
+            run_phase(db, "update", gen_update(spec), drain=True)
+            rows.append(f"features_nolimit/{wl}/{name},0.0,"
+                        f"amp={space_amplification(db):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

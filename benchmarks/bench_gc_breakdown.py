@@ -1,0 +1,42 @@
+"""Fig. 4: GC latency breakdown (Read / GC-Lookup / Write / Write-Index).
+
+Per system x workload after a 3x-dataset update phase: the share of GC
+time spent in each step, and the average per-GC latency.
+"""
+
+from __future__ import annotations
+
+from repro.store.device import IOClass
+
+from .common import emit, gen_update, loaded_db, make_spec, run_phase
+
+SYSTEMS = ["titan", "terarkdb", "scavenger_plus"]
+WORKLOADS = ["fixed-1024", "fixed-8192", "fixed-32768", "mixed-8k",
+             "pareto-1k"]
+STEPS = {"read": IOClass.GC_READ, "lookup": IOClass.GC_LOOKUP,
+         "write": IOClass.GC_WRITE, "write_index": IOClass.GC_WRITE_INDEX}
+
+
+def run() -> list:
+    rows = []
+    for wl in WORKLOADS:
+        for sysname in SYSTEMS:
+            spec = make_spec(wl)
+            db = loaded_db(sysname, spec)
+            run_phase(db, "update", gen_update(spec), drain=True)
+            # The four GC_* IOClasses are exclusively charged by GC steps
+            # (including Write-Index, which lands during job effects), so
+            # device stats give the exact Fig. 4 decomposition.
+            times = {name: db.device.stats.by_class[c].time_s
+                     for name, c in STEPS.items()}
+            total = sum(times.values()) or 1e-12
+            runs = max(1, int(db.stats_counters["gc_runs"]))
+            avg_us = 1e6 * total / runs
+            parts = ";".join(f"{k}={v / total:.2f}" for k, v in times.items())
+            rows.append(f"gc_breakdown/{wl}/{sysname},{avg_us:.1f},"
+                        f"{parts};gc_runs={runs}")
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

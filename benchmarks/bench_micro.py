@@ -1,0 +1,47 @@
+"""Fig. 13: microbenchmarks under a 1.5x space limit.
+
+Load / update / read / scan throughput per system under Mixed-8K and
+Pareto-1K, plus the update-phase I/O totals of Fig. 13(c) (read/write
+bytes and the GC share).
+"""
+
+from __future__ import annotations
+
+from repro.store.device import IOClass
+
+from .common import (SHORT, emit, fast, gen_load, gen_read, gen_scan,
+                     gen_update, make_db, make_spec, run_phase, systems)
+
+WORKLOADS = ["mixed-8k", "pareto-1k"]
+
+
+def run() -> list:
+    rows = []
+    n_reads = 2000 if fast() else 20000
+    n_scans = 100 if fast() else 1000
+    for wl in WORKLOADS:
+        for sysname in systems():
+            spec = make_spec(wl)
+            db = make_db(sysname, spec, space_limit_x=1.5)
+            rl = run_phase(db, "load", gen_load(spec), drain=True)
+            ru = run_phase(db, "update", gen_update(spec), drain=True)
+            rr = run_phase(db, "read", gen_read(spec, n_reads))
+            rs = run_phase(db, "scan", gen_scan(spec, n_scans))
+            st = db.device.stats
+            gc_read = st.total(IOClass.GC_READ, IOClass.GC_LOOKUP).bytes
+            gc_write = st.total(IOClass.GC_WRITE,
+                                IOClass.GC_WRITE_INDEX).bytes
+            us = 1e6 * ru.sim_seconds / max(1, ru.ops)
+            rows.append(
+                f"micro/{wl}/{SHORT[sysname]},{us:.2f},"
+                f"load_kops={rl.kops_per_s:.2f};upd_kops={ru.kops_per_s:.2f};"
+                f"read_kops={rr.kops_per_s:.2f};scan_kops={rs.kops_per_s:.2f};"
+                f"io_read_mb={ru.io_read_bytes / 1e6:.1f};"
+                f"io_write_mb={ru.io_write_bytes / 1e6:.1f};"
+                f"gc_read_mb={gc_read / 1e6:.1f};gc_write_mb={gc_write / 1e6:.1f};"
+                f"cap_breaches={db.stats_counters['cap_breaches']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,51 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-cell table.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits
+one row per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the MFU bound.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def rows_from_artifacts(pattern: str = "*.json"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, pattern))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("skipped"):
+            continue
+        ro = d["roofline"]
+        name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d.get("tag"):
+            name += f"/{d['tag']}"
+        rows.append(
+            f"{name},{1e6 * ro['step_time_bound_s']:.1f},"
+            f"compute_s={ro['compute_s']:.3e};"
+            f"memory_s={ro['memory_s']:.3e};"
+            f"collective_s={ro['collective_s']:.3e};"
+            f"dominant={ro['dominant'].replace('_s', '')};"
+            f"useful={ro['useful_flops_ratio']:.3f};"
+            f"mfu_bound={ro['mfu_bound']:.3f};"
+            f"coll_bytes={d['collective_bytes_per_dev']:.3e}")
+    return rows
+
+
+def run() -> list:
+    rows = rows_from_artifacts()
+    if not rows:
+        rows = ["roofline/NO_ARTIFACTS,0.0,"
+                "run `python -m repro.launch.dryrun --all --both-meshes`"]
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

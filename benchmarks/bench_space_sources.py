@@ -1,0 +1,35 @@
+"""Fig. 6 / Fig. 21: sources of space amplification.
+
+Per system after update: S_index (index-tree space amp, eq. 1) and the
+exposed/hidden garbage split of the value store (eq. 3, via the oracle).
+"""
+
+from __future__ import annotations
+
+from .common import (emit, gen_update, loaded_db, make_spec, run_phase,
+                     space_amplification, systems)
+
+WORKLOADS = ["fixed-8192"]
+
+
+def run() -> list:
+    rows = []
+    for wl in WORKLOADS:
+        for sysname in systems():
+            spec = make_spec(wl)
+            db = loaded_db(sysname, spec)
+            r = run_phase(db, "update", gen_update(spec), drain=True)
+            s = db.stats()
+            g = db.oracle.garbage_split(db)
+            us = 1e6 * r.sim_seconds / max(1, r.ops)
+            rows.append(
+                f"space_sources/{wl}/{sysname},{us:.2f},"
+                f"s_index={s['space']['s_index']:.3f};"
+                f"exposed_over_d={g['exposed_over_d']:.3f};"
+                f"hidden_over_d={g['hidden_over_d']:.3f};"
+                f"amp={space_amplification(db):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

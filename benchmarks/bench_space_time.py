@@ -1,0 +1,33 @@
+"""Fig. 3 / Fig. 14-16: space-time trade-off without space limits.
+
+Per system x workload: update throughput, space amplification, and update
+tail latencies (p50/p99/p999) — the no-limit halves of Figs. 14-16.
+"""
+
+from __future__ import annotations
+
+from .common import (SHORT, emit, gen_update, loaded_db, make_spec,
+                     run_phase, space_amplification, systems)
+
+WORKLOADS = ["mixed-8k", "pareto-1k"]
+
+
+def run() -> list:
+    rows = []
+    for wl in WORKLOADS:
+        for sysname in systems():
+            spec = make_spec(wl)
+            db = loaded_db(sysname, spec)
+            r = run_phase(db, "update", gen_update(spec), drain=True,
+                          capture_latency=True)
+            amp = space_amplification(db)
+            us = 1e6 * r.sim_seconds / max(1, r.ops)
+            rows.append(
+                f"space_time/{wl}/{SHORT[sysname]},{us:.2f},"
+                f"amp={amp:.3f};kops={r.kops_per_s:.2f};"
+                f"p99us={r.p99_us:.0f};p999us={r.p999_us:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

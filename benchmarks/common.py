@@ -1,0 +1,57 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Environment knobs:
+  REPRO_BENCH_MB       dataset size in MB (default 8; paper: 100 GB)
+  REPRO_BENCH_SYSTEMS  comma list (default all six)
+  REPRO_BENCH_FAST     if set, shrink op counts further (CI smoke)
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.bench import (WorkloadSpec, gen_load, gen_read, gen_scan,  # noqa: E402
+                         gen_update, gen_ycsb, make_db, run_phase,
+                         space_amplification)
+
+SYSTEMS = ["rocksdb", "blobdb", "titan", "terarkdb", "scavenger",
+           "scavenger_plus"]
+SHORT = {"rocksdb": "RDB", "blobdb": "BlobDB", "titan": "Titan",
+         "terarkdb": "TDB", "scavenger": "S", "scavenger_plus": "S+"}
+
+
+def dataset_mb() -> int:
+    return int(os.environ.get("REPRO_BENCH_MB", "8"))
+
+
+def systems() -> List[str]:
+    env = os.environ.get("REPRO_BENCH_SYSTEMS")
+    return env.split(",") if env else list(SYSTEMS)
+
+
+def fast() -> bool:
+    return bool(os.environ.get("REPRO_BENCH_FAST"))
+
+
+def make_spec(value_kind: str, update_x: float = 3.0) -> WorkloadSpec:
+    ds = dataset_mb() << 20
+    if fast():
+        ds = min(ds, 4 << 20)
+    return WorkloadSpec(value_kind=value_kind, dataset_bytes=ds,
+                        update_bytes=int(update_x * ds))
+
+
+def loaded_db(system: str, spec: WorkloadSpec,
+              space_limit_x: Optional[float] = None):
+    db = make_db(system, spec, space_limit_x=space_limit_x)
+    run_phase(db, "load", gen_load(spec), drain=True)
+    return db
+
+
+def emit(rows: List[str]) -> None:
+    for r in rows:
+        print(r, flush=True)

@@ -1,0 +1,63 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Selection:
+
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run space_time   # one suite
+    REPRO_BENCH_FAST=1 ... -m benchmarks.run             # CI smoke sizes
+
+Suites:
+  space_time     Fig. 3/14-16  (throughput + space amp + tail latency)
+  gc_breakdown   Fig. 4        (GC step latency shares)
+  space_sources  Fig. 6/21     (S_index, exposed/hidden garbage)
+  micro          Fig. 13       (1.5x-capped load/update/read/scan + I/O)
+  ycsb           Fig. 17/18    (YCSB A-F)
+  features       Fig. 19/20    (ablation ladder)
+  kernels        Pallas kernel micro-costs (interpret mode)
+  roofline       dry-run roofline terms (reads dryrun JSON artifacts)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    which = set(a for a in sys.argv[1:] if not a.startswith("-"))
+    from . import (bench_features, bench_gc_breakdown, bench_micro,
+                   bench_space_sources, bench_space_time, bench_ycsb)
+    suites = {
+        "space_time": bench_space_time.run,
+        "gc_breakdown": bench_gc_breakdown.run,
+        "space_sources": bench_space_sources.run,
+        "micro": bench_micro.run,
+        "ycsb": bench_ycsb.run,
+        "features": bench_features.run,
+    }
+    try:
+        from . import bench_kernels
+        suites["kernels"] = bench_kernels.run
+    except Exception:
+        pass
+    try:
+        from . import bench_roofline
+        suites["roofline"] = bench_roofline.run
+    except Exception:
+        pass
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if which and name not in which:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # keep the suite going; surface the failure
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+        print(f"# suite {name} done in {time.time() - t0:.0f}s",
+              file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

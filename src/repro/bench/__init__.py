@@ -1,0 +1,10 @@
+"""Workload generators and benchmark harness (paper Section IV setup)."""
+
+from .harness import Oracle, PhaseResult, make_db, run_phase, space_amplification
+from .workloads import (ScaleConfig, ValueModel, WorkloadSpec, gen_load,
+                        gen_read, gen_scan, gen_update, gen_ycsb, make_key)
+
+__all__ = ["Oracle", "PhaseResult", "make_db", "run_phase",
+           "space_amplification", "ScaleConfig", "ValueModel", "WorkloadSpec",
+           "gen_load", "gen_read", "gen_scan", "gen_update", "gen_ycsb",
+           "make_key"]

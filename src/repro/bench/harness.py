@@ -1,0 +1,130 @@
+"""Benchmark harness: drives op streams against a KVStore, measuring
+simulated throughput, space amplification and the hidden/exposed garbage
+split via a user-level oracle (paper Fig. 5/6 decomposition).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterable, Optional
+
+from ..core.db import KVStore
+from ..core.options import Options, preset
+from ..store.format import VT_DELETE, VT_VALUE
+from .workloads import KEY_BYTES, Op, ScaleConfig, WorkloadSpec
+
+
+class Oracle:
+    """Tracks the true user dataset so the benchmark can split engine
+    'live' bytes into valid data D and hidden garbage G_H (eq. 3).
+
+    * logical_bytes: Σ (key + current value) — space-amp denominator;
+    * sep_bytes: Σ current value sizes above the separation threshold —
+      the engine's value-store live bytes minus this = hidden garbage.
+    """
+
+    def __init__(self, sep_threshold: int) -> None:
+        self.sep_threshold = sep_threshold
+        self._sizes: Dict[bytes, int] = {}
+        self.logical_bytes = 0
+        self.sep_bytes = 0
+
+    def on_write(self, ukey: bytes, vtype: int, payload: bytes) -> None:
+        old = self._sizes.pop(ukey, None)
+        if old is not None:
+            self.logical_bytes -= old + KEY_BYTES
+            if old >= self.sep_threshold:
+                self.sep_bytes -= old
+        if vtype == VT_VALUE:
+            self._sizes[ukey] = len(payload)
+            self.logical_bytes += len(payload) + KEY_BYTES
+            if len(payload) >= self.sep_threshold:
+                self.sep_bytes += len(payload)
+
+    def garbage_split(self, db: KVStore) -> Dict[str, float]:
+        tot, live = db.versions.value_stats()
+        exposed = tot - live
+        hidden = max(0, live - self.sep_bytes)
+        d = max(1, self.sep_bytes)
+        return {"exposed_bytes": exposed, "hidden_bytes": hidden,
+                "exposed_over_d": exposed / d, "hidden_over_d": hidden / d}
+
+
+@dataclasses.dataclass
+class PhaseResult:
+    name: str
+    ops: int
+    sim_seconds: float
+    wall_seconds: float
+    kops_per_s: float
+    io_read_bytes: int
+    io_write_bytes: int
+    p50_us: float = 0.0
+    p99_us: float = 0.0
+    p999_us: float = 0.0
+
+    def row(self) -> str:
+        us = 1e6 * self.sim_seconds / max(1, self.ops)
+        return f"{self.name},{us:.2f},{self.kops_per_s:.2f}kops/s"
+
+
+def make_db(system: str, spec: WorkloadSpec,
+            space_limit_x: Optional[float] = None, **over) -> (
+        KVStore):
+    opts = preset(system, **over)
+    ScaleConfig(spec.dataset_bytes).apply(opts)
+    if space_limit_x is not None:
+        opts.space_cap_bytes = int(space_limit_x * spec.dataset_bytes)
+    db = KVStore(opts)
+    oracle = Oracle(opts.sep_threshold)
+    db.on_user_write = oracle.on_write
+    db.oracle = oracle  # type: ignore[attr-defined]
+    return db
+
+
+def run_phase(db: KVStore, name: str, ops: Iterable[Op],
+              drain: bool = False,
+              capture_latency: bool = False) -> PhaseResult:
+    st = db.device.stats
+    r0 = st.read_bytes()
+    w0 = st.write_bytes()
+    t0 = db.clock.now
+    wall0 = time.perf_counter()
+    n = 0
+    lats = [] if capture_latency else None
+    for op in ops:
+        kind = op[0]
+        if lats is not None:
+            op_t0 = db.clock.now
+        if kind == "put":
+            db.put(op[1], op[2])
+        elif kind == "get":
+            db.get(op[1])
+        elif kind == "del":
+            db.delete(op[1])
+        else:
+            db.scan(op[1], op[2])
+        if lats is not None:
+            lats.append(db.clock.now - op_t0)
+        n += 1
+    if drain:
+        db.drain()
+    sim = db.clock.now - t0
+    wall = time.perf_counter() - wall0
+    res = PhaseResult(name=name, ops=n, sim_seconds=sim, wall_seconds=wall,
+                      kops_per_s=n / max(sim, 1e-12) / 1e3,
+                      io_read_bytes=st.read_bytes() - r0,
+                      io_write_bytes=st.write_bytes() - w0)
+    if lats:
+        lats.sort()
+        res.p50_us = 1e6 * lats[len(lats) // 2]
+        res.p99_us = 1e6 * lats[min(len(lats) - 1, int(len(lats) * 0.99))]
+        res.p999_us = 1e6 * lats[min(len(lats) - 1, int(len(lats) * 0.999))]
+    return res
+
+
+def space_amplification(db: KVStore) -> float:
+    oracle = getattr(db, "oracle", None)
+    logical = oracle.logical_bytes if oracle else 1
+    return db.device.total_bytes() / max(1, logical)

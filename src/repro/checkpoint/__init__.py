@@ -1,0 +1,5 @@
+"""LSM-backed checkpointing (checkpoint workload = KV separation)."""
+
+from .store import CheckpointConfig, CheckpointStore
+
+__all__ = ["CheckpointConfig", "CheckpointStore"]

@@ -1,0 +1,150 @@
+"""LSM-backed tensor checkpoint store — checkpointing *is* KV separation.
+
+A sharded checkpoint is tiny metadata (names/shapes/steps) plus huge
+values (tensor shards): exactly the workload Scavenger+ optimizes.  The
+store keeps metadata inline in the index LSM-tree and tensor shards as
+separated values; superseded shards from incremental checkpoints become
+*exposed garbage* that the engine's GC reclaims (compensated-size
+compaction keeps the metadata tree compact).
+
+Durability: the engine's WAL + manifest make saves crash-consistent — a
+checkpoint is visible iff its ``meta`` key committed (written LAST).
+``FSBlockDevice`` persists across process restarts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+from ..core.db import KVStore
+from ..core.options import Options, preset
+from ..store.device import FSBlockDevice
+
+CHUNK = 1 << 20          # 1 MiB shard chunks
+
+
+def _key_meta(step: int) -> bytes:
+    return b"ckpt/%016d/meta" % step
+
+
+def _key_chunk(step: int, path: str, i: int) -> bytes:
+    return b"ckpt/%016d/t/%s/%08d" % (step, path.encode(), i)
+
+
+@dataclasses.dataclass
+class CheckpointConfig:
+    keep_last: int = 2
+    engine: str = "scavenger_plus"
+
+
+class CheckpointStore:
+    def __init__(self, root: Optional[str] = None,
+                 cc: Optional[CheckpointConfig] = None,
+                 db: Optional[KVStore] = None, recover: bool = False
+                 ) -> None:
+        self.cc = cc or CheckpointConfig()
+        if db is not None:
+            self.db = db
+        else:
+            opts = preset(self.cc.engine)
+            device = FSBlockDevice(root) if root else None
+            self.db = KVStore(opts, device=device, recover=recover)
+
+    # -- tree <-> flat ---------------------------------------------------
+    @staticmethod
+    def _flatten(tree) -> List[Tuple[str, np.ndarray]]:
+        import jax
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path, leaf in flat:
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            out.append((name, np.asarray(leaf)))
+        return out
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None
+             ) -> None:
+        leaves = self._flatten(tree)
+        manifest = {"step": step, "extra": extra or {}, "tensors": {}}
+        for name, arr in leaves:
+            data = arr.tobytes()
+            n_chunks = max(1, -(-len(data) // CHUNK))
+            manifest["tensors"][name] = {
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "chunks": n_chunks}
+            for i in range(n_chunks):
+                self.db.put(_key_chunk(step, name, i),
+                            data[i * CHUNK:(i + 1) * CHUNK])
+        # meta commits the checkpoint (written last → crash-consistent)
+        self.db.put(_key_meta(step), msgpack.packb(manifest))
+        self._enforce_retention()
+
+    def steps(self) -> List[int]:
+        out = []
+        for k, _ in self.db.scan(b"ckpt/", 1 << 20):
+            if k.endswith(b"/meta"):
+                out.append(int(k.split(b"/")[1]))
+        return sorted(set(out))
+
+    def latest(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: Optional[int] = None, like: Any = None):
+        """Returns (step, tree).  ``like`` supplies the pytree structure
+        (and target shardings — resharding happens on device_put)."""
+        import jax
+        step = self.latest() if step is None else step
+        if step is None:
+            return None, None
+        raw = self.db.get(_key_meta(step))
+        if raw is None:
+            raise KeyError(f"no checkpoint at step {step}")
+        manifest = msgpack.unpackb(raw, raw=False)
+        tensors: Dict[str, np.ndarray] = {}
+        for name, info in manifest["tensors"].items():
+            parts = []
+            for i in range(info["chunks"]):
+                blob = self.db.get(_key_chunk(step, name, i))
+                assert blob is not None, (name, i)
+                parts.append(blob)
+            arr = np.frombuffer(b"".join(parts), dtype=info["dtype"]) \
+                .reshape(info["shape"])
+            tensors[name] = arr
+        if like is None:
+            return step, tensors
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in flat:
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            arr = tensors[name]
+            leaves.append(jax.device_put(arr.astype(leaf.dtype),
+                                         getattr(leaf, "sharding", None))
+                          if hasattr(leaf, "dtype") else arr)
+        return step, jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves)
+
+    def delete(self, step: int) -> None:
+        """Tombstone all keys of a checkpoint — the shards become exposed
+        garbage for the engine's GC."""
+        raw = self.db.get(_key_meta(step))
+        if raw is None:
+            return
+        manifest = msgpack.unpackb(raw, raw=False)
+        for name, info in manifest["tensors"].items():
+            for i in range(info["chunks"]):
+                self.db.delete(_key_chunk(step, name, i))
+        self.db.delete(_key_meta(step))
+
+    def _enforce_retention(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.cc.keep_last]:
+            self.delete(s)
+
+    def stats(self) -> Dict:
+        return self.db.stats()

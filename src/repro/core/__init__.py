@@ -1,0 +1,16 @@
+"""Scavenger+ core: the KV-separated LSM-tree engine (paper Section III).
+
+Public API::
+
+    from repro.core import KVStore, Options, preset
+    db = KVStore(preset("scavenger_plus"))
+    db.put(b"k", b"v" * 4096)
+    db.get(b"k")
+    db.scan(b"a", 100)
+    db.stats()
+"""
+
+from .db import KVStore
+from .options import Options, preset
+
+__all__ = ["KVStore", "Options", "preset"]

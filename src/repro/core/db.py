@@ -1,0 +1,609 @@
+"""The key-value store facade.
+
+``KVStore(preset('scavenger_plus'))`` gives the paper's full system;
+``preset('rocksdb') / 'blobdb' / 'titan' / 'terarkdb'`` give the evaluated
+baselines; the ablation presets give the Fig. 19/20 ladder.
+
+Execution model: a discrete-event simulation over simulated time (see
+``scheduler.py``) — user operations advance the clock with foreground
+costs, background jobs occupy lanes, effects apply when their lane
+completes, and write stalls advance the clock to the next completion.
+"""
+
+from __future__ import annotations
+
+import heapq as _heapq
+from bisect import bisect_left
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+from ..store.blocks import BlockCache
+from ..store.device import BlockDevice, Clock, CostModel, IOClass
+from ..store.format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF, VT_VALUE,
+                            decode_ka, decode_kf, encode_ka, encode_kf)
+from ..store.memtable import WAL, Memtable
+from ..store.tables import (Entry, KTableReader, KTableWriter, LogTableReader,
+                            LogTableWriter, RTableReader, RTableWriter,
+                            VBTableReader, VBTableWriter)
+from .compaction import execute_compaction, plan_compaction
+from .dropcache import DropCache
+from .gc import pick_gc_candidate, run_gc_terark, run_gc_titan
+from .options import Options
+from .scheduler import JOB_COMPACTION, JOB_FLUSH, JOB_GC, Scheduler
+from .version import FileMeta, VersionSet, VSSTMeta
+
+GC_STEP_CLASSES = (IOClass.GC_READ, IOClass.GC_LOOKUP, IOClass.GC_WRITE,
+                   IOClass.GC_WRITE_INDEX)
+
+
+class KVStore:
+    def __init__(self, opts: Options, device: Optional[BlockDevice] = None,
+                 recover: bool = False) -> None:
+        self.opts = opts.validate()
+        self.device = device or BlockDevice(Clock(), CostModel())
+        self.clock = self.device.clock
+        self.cache = BlockCache(opts.cache_bytes)
+        if recover:
+            # Crash restart: fid 1 is always the manifest (first file
+            # created); replay it, then the last WAL (torn tail tolerated).
+            self.device.charge_time = False
+            self.versions = VersionSet(self.device, opts.num_levels,
+                                       manifest_fid=1)
+            self.versions.recover()
+        else:
+            self.versions = VersionSet(self.device, opts.num_levels)
+        self.sched = Scheduler(self.clock, self.device, opts)
+        self.dropcache = DropCache(opts.dropcache_entries)
+        self.mem = Memtable()
+        if recover:
+            # Replay every WAL logged since the last completed flush, in
+            # order (earlier seqs overwritten by later ones in the dict).
+            for wal_fid in list(self.versions.pending_wals):
+                if not self.device.exists(wal_fid):
+                    continue
+                for ukey, seq, vtype, payload in WAL.replay(self.device,
+                                                            wal_fid):
+                    self.mem.put(ukey, seq, vtype, payload)
+                    self.versions.seq = max(self.versions.seq, seq)
+                self.device.delete(wal_fid)
+            self.versions.pending_wals.clear()
+            self.device.charge_time = True
+        self.wal = WAL(self.device)
+        self.versions.log_edit({"wal": self.wal.fid,
+                                "seq": self.versions.seq})
+        self.versions.active_wal = self.wal.fid
+        self.versions.pending_wals.append(self.wal.fid)
+        self.immutables: List[Tuple[Memtable, WAL]] = []
+        self._readers: Dict[int, object] = {}
+        self.stats_counters: Dict[str, float] = {
+            "puts": 0, "gets": 0, "deletes": 0, "scans": 0, "flushes": 0,
+            "compactions": 0, "gc_runs": 0, "stall_time_s": 0.0,
+            "slowdown_time_s": 0.0, "forced_gc": 0, "cap_breaches": 0,
+        }
+        self.gc_step_time: Dict[str, float] = {c.value: 0.0
+                                               for c in GC_STEP_CLASSES}
+        self._ops_since_sched = 0
+        self._gc_check_pending = False
+        # optional instrumentation hook: called with (ukey, vtype, payload)
+        # on every user write — used by the bench oracle for true-garbage
+        # (hidden vs exposed) measurement.
+        self.on_user_write: Optional[Callable[[bytes, int, bytes], None]] = None
+
+    # ==================================================================
+    # Write path
+    # ==================================================================
+
+    def put(self, ukey: bytes, value: bytes) -> None:
+        self._write(ukey, VT_VALUE, value)
+        self.stats_counters["puts"] += 1
+
+    def delete(self, ukey: bytes) -> None:
+        self._write(ukey, VT_DELETE, b"")
+        self.stats_counters["deletes"] += 1
+
+    def _write(self, ukey: bytes, vtype: int, payload: bytes) -> None:
+        self.sched.pump()
+        self._maybe_stall()
+        self.versions.seq += 1
+        self.wal.append(ukey, self.versions.seq, vtype, payload)
+        self.mem.put(ukey, self.versions.seq, vtype, payload)
+        self.device.charge_cpu()
+        if self.on_user_write is not None:
+            self.on_user_write(ukey, vtype, payload)
+        if self.mem.approx_bytes >= self.opts.memtable_bytes:
+            self._rotate_memtable()
+        self._ops_since_sched += 1
+        if self._ops_since_sched >= 64:
+            self._ops_since_sched = 0
+            self.maybe_schedule_background()
+            self.sched.govern_bandwidth()
+
+    def write_index_entry(self, ukey: bytes, vtype: int, payload: bytes,
+                          cls: IOClass) -> None:
+        """Internal write used by Titan-style GC Write-Index."""
+        self.versions.seq += 1
+        self.wal.append(ukey, self.versions.seq, vtype, payload, cls)
+        self.mem.put(ukey, self.versions.seq, vtype, payload)
+        if self.mem.approx_bytes >= self.opts.memtable_bytes:
+            self._rotate_memtable()
+
+    def _rotate_memtable(self) -> None:
+        self.immutables.append((self.mem, self.wal))
+        self.mem = Memtable()
+        self.wal = WAL(self.device)
+        self.versions.log_edit({"wal": self.wal.fid,
+                                "seq": self.versions.seq})
+        self.versions.active_wal = self.wal.fid
+        self.maybe_schedule_background()
+
+    # -- stalls ----------------------------------------------------------
+    def _stall_reason(self) -> Optional[str]:
+        if len(self.immutables) > 2:
+            return "memtable"
+        l0 = len(self.versions.levels[0])
+        if l0 >= self.opts.l0_stop:
+            return "l0"
+        cap = self.opts.space_cap_bytes
+        if cap is not None and self.device.total_bytes() >= cap:
+            return "space"
+        return None
+
+    def _maybe_stall(self) -> None:
+        # slowdown band first (RocksDB-style soft delay)
+        if len(self.versions.levels[0]) >= self.opts.l0_slowdown:
+            self.clock.advance(100e-6)
+            self.stats_counters["slowdown_time_s"] += 100e-6
+        guard = 0
+        while True:
+            reason = self._stall_reason()
+            if reason is None:
+                return
+            self.maybe_schedule_background(stalled_for=reason)
+            t0 = self.clock.now
+            if not self.sched.wait_for_event():
+                # Nothing in flight can relieve the stall (e.g. cap set
+                # below working-set size) — record the breach and proceed
+                # so workloads terminate.
+                self.stats_counters["cap_breaches"] += 1
+                return
+            self.stats_counters["stall_time_s"] += self.clock.now - t0
+            guard += 1
+            if guard > 100000:
+                raise RuntimeError("stall livelock")
+
+    # ==================================================================
+    # Read path
+    # ==================================================================
+
+    def mem_lookup(self, ukey: bytes) -> Optional[Tuple[int, int, bytes]]:
+        v = self.mem.get(ukey)
+        if v is not None:
+            return v
+        for m, _ in reversed(self.immutables):
+            v = m.get(ukey)
+            if v is not None:
+                return v
+        return None
+
+    def get_entry(self, ukey: bytes, cls: IOClass) -> Optional[Entry]:
+        """Index-LSM point lookup: memtable → immutables → L0 → L1+.
+
+        GC passes GC_LOOKUP here — on DTables the probe touches only
+        high-priority index-entry blocks (paper III-B.2)."""
+        self.device.charge_cpu()
+        v = self.mem_lookup(ukey)
+        if v is not None:
+            seq, vtype, payload = v
+            return (ukey, seq, vtype, payload)
+        use_idx_probe = cls == IOClass.GC_LOOKUP
+        for f in self.versions.levels[0]:           # newest first
+            if f.smallest <= ukey <= f.largest:
+                r = self.reader(f.fid, cls)
+                e = (r.get_index_entry(ukey, cls) if use_idx_probe
+                     else r.get(ukey, cls))
+                if e is not None:
+                    return e
+        for level in range(1, self.versions.num_levels):
+            files = self.versions.levels[level]
+            if not files:
+                continue
+            smallests = [f.smallest for f in files]
+            i = bisect_left(smallests, ukey)
+            # Probe every file containing the key.  The level invariant
+            # normally yields exactly one, but in-flight compaction
+            # effects can leave a short-lived overlap — take max seq.
+            cands = []
+            if i < len(files) and files[i].smallest == ukey:
+                cands.append(files[i])
+            j = i - 1
+            while j >= 0 and files[j].largest >= ukey:
+                if files[j].smallest <= ukey:
+                    cands.append(files[j])
+                j -= 1
+            best: Optional[Entry] = None
+            for cand in cands:
+                r = self.reader(cand.fid, cls)
+                e = (r.get_index_entry(ukey, cls) if use_idx_probe
+                     else r.get(ukey, cls))
+                if e is not None and (best is None or e[1] > best[1]):
+                    best = e
+            if best is not None:
+                return best
+        return None
+
+    def get(self, ukey: bytes) -> Optional[bytes]:
+        self.sched.pump()
+        self.stats_counters["gets"] += 1
+        e = self.get_entry(ukey, IOClass.USER_READ)
+        return self._resolve_value(e, IOClass.USER_READ)
+
+    def _resolve_value(self, e: Optional[Entry], cls: IOClass
+                       ) -> Optional[bytes]:
+        if e is None:
+            return None
+        _, _, vtype, payload = e
+        if vtype == VT_DELETE:
+            return None
+        if vtype == VT_VALUE:
+            return payload
+        if vtype == VT_INDEX_KA:
+            fid, off, ln = decode_ka(payload)
+            if not self.device.exists(fid):
+                return None
+            return self.log_reader(fid).read_record(off, ln, cls)[1]
+        # KF: probe the lookup-group candidates (primary first).
+        fid, _ = decode_kf(payload)
+        for cand in self.versions.lookup_candidates(fid):
+            meta = self.versions.vssts.get(cand)
+            if meta is None or not self.device.exists(cand):
+                continue
+            rr = (self.r_reader(cand) if meta.fmt == "rtable"
+                  else self.vb_reader(cand))
+            val = rr.get(e[0], cls)
+            if val is not None:
+                return val
+        return None
+
+    def scan(self, start: bytes, count: int) -> List[Tuple[bytes, bytes]]:
+        """Range scan: merged iteration over memtables and all levels,
+        resolving separated values through the value store."""
+        self.sched.pump()
+        self.stats_counters["scans"] += 1
+        streams: List[Iterator[Entry]] = []
+
+        def mem_stream(m: Memtable) -> Iterator[Entry]:
+            for k, (seq, vt, pl) in m.sorted_items():
+                if k >= start:
+                    yield (k, seq, vt, pl)
+
+        streams.append(mem_stream(self.mem))
+        for m, _ in self.immutables:
+            streams.append(mem_stream(m))
+        for f in self.versions.levels[0]:
+            if f.largest >= start:
+                streams.append(self.reader(f.fid, IOClass.USER_READ)
+                               .iter_from(start, IOClass.USER_READ))
+        for level in range(1, self.versions.num_levels):
+            files = [f for f in self.versions.levels[level]
+                     if f.largest >= start]
+            if files:
+                streams.append(self._level_stream(files, start))
+        out: List[Tuple[bytes, bytes]] = []
+        prev: Optional[bytes] = None
+        for e in _heapq.merge(*streams, key=lambda e: (e[0], -e[1])):
+            if e[0] == prev:
+                continue
+            prev = e[0]
+            val = self._resolve_value(e, IOClass.USER_READ)
+            if val is None:
+                continue
+            out.append((e[0], val))
+            if len(out) >= count:
+                break
+        return out
+
+    def _level_stream(self, files: List[FileMeta], start: bytes
+                      ) -> Iterator[Entry]:
+        for f in files:
+            yield from self.reader(f.fid, IOClass.USER_READ) \
+                .iter_from(start, IOClass.USER_READ)
+
+    # ==================================================================
+    # Table/reader plumbing
+    # ==================================================================
+
+    def reader(self, fid: int, cls: IOClass = IOClass.USER_READ
+               ) -> KTableReader:
+        r = self._readers.get(fid)
+        if r is None:
+            r = KTableReader(self.device, fid, self.cache, cls)
+            self._readers[fid] = r
+        return r  # type: ignore[return-value]
+
+    def r_reader(self, fid: int) -> RTableReader:
+        r = self._readers.get(fid)
+        if r is None:
+            r = RTableReader(self.device, fid, self.cache)
+            self._readers[fid] = r
+        return r  # type: ignore[return-value]
+
+    def vb_reader(self, fid: int) -> VBTableReader:
+        r = self._readers.get(fid)
+        if r is None:
+            r = VBTableReader(self.device, fid, self.cache)
+            self._readers[fid] = r
+        return r  # type: ignore[return-value]
+
+    def log_reader(self, fid: int) -> LogTableReader:
+        r = self._readers.get(fid)
+        if r is None:
+            r = LogTableReader(self.device, fid)
+            self._readers[fid] = r
+        return r  # type: ignore[return-value]
+
+    def drop_table(self, fid: int) -> None:
+        self._readers.pop(fid, None)
+        self.cache.evict_file(fid)
+        self.device.delete(fid)
+
+    def warm_open(self, fid: int, kind: str) -> None:
+        """Open a just-written table for free — its footer/index pages are
+        still in page cache (RocksDB table-cache + OS cache behaviour)."""
+        if fid in self._readers or not self.device.exists(fid):
+            return
+        with self.device.uncharged():
+            if kind == "ksst":
+                self._readers[fid] = KTableReader(self.device, fid, self.cache)
+            elif kind == "rtable":
+                self._readers[fid] = RTableReader(self.device, fid, self.cache)
+            elif kind == "btable":
+                self._readers[fid] = VBTableReader(self.device, fid, self.cache)
+            else:
+                self._readers[fid] = LogTableReader(self.device, fid)
+
+    def new_vsst_writer(self):
+        if self.opts.vsst_format == "rtable":
+            return RTableWriter(self.device)
+        if self.opts.vsst_format == "btable":
+            return VBTableWriter(self.device)
+        return LogTableWriter(self.device)
+
+    def finish_vsst(self, writer, cls: IOClass, fid: Optional[int] = None,
+                    is_hot: bool = False) -> VSSTMeta:
+        fid, props = writer.finish(cls, fid=fid)
+        self.warm_open(fid, self.opts.vsst_format)
+        return VSSTMeta(
+            fid=fid, file_size=props["file_size"],
+            total_value_bytes=props["total_value_bytes"],
+            live_value_bytes=props["total_value_bytes"],
+            num_entries=props["num_entries"],
+            fmt=self.opts.vsst_format, is_hot=is_hot)
+
+    def make_ksst_meta(self, fid: int, props: dict, level: int) -> FileMeta:
+        self.warm_open(fid, "ksst")
+        return FileMeta(
+            fid=fid, level=level, smallest=bytes(props["smallest"]),
+            largest=bytes(props["largest"]), file_size=props["file_size"],
+            num_entries=props["num_entries"],
+            compensated_bytes=props["compensated_bytes"],
+            value_refs={int(k): tuple(v)
+                        for k, v in props["value_refs"].items()},
+            table_type=props["table_type"])
+
+    def retire_vsst(self, meta: VSSTMeta) -> None:
+        """Handle a vSST whose live-byte counter reached zero.
+
+        KA-mode accounting (address payload comparison at compaction) is
+        exact, so the file is deleted immediately.  KF-mode accounting is
+        an estimate (inheritance-chain attribution after GC moves), so the
+        file defers to standalone GC, which validates every record before
+        the file is dropped — a zero-live file sorts first in the greedy
+        max-garbage-ratio pick."""
+        if meta.pending_delete or meta.being_gc:
+            return
+        if self.opts.index_kind == "ka":
+            meta.pending_delete = True
+            self.versions.log_and_apply({"del_vsst": [meta.fid]})
+            self.drop_table(meta.fid)
+
+    def dropcache_record(self, ukey: bytes) -> None:
+        if self.opts.dropcache:
+            self.dropcache.record_drop(ukey)
+
+    # ==================================================================
+    # Background work
+    # ==================================================================
+
+    def maybe_schedule_background(self, stalled_for: Optional[str] = None
+                                  ) -> None:
+        # flush
+        while self.immutables and self.sched.can_admit(JOB_FLUSH):
+            imm, wal = self.immutables[0]
+            busy = getattr(imm, "_flushing", False)
+            if busy:
+                break
+            imm._flushing = True  # type: ignore[attr-defined]
+            self.sched.run_job(JOB_FLUSH, lambda i=imm, w=wal:
+                               self._flush_body(i, w))
+        # compaction
+        while self.sched.can_admit(JOB_COMPACTION):
+            plan = plan_compaction(self.versions, self.opts)
+            if plan is None:
+                break
+            self.sched.run_job(JOB_COMPACTION,
+                               lambda p=plan: execute_compaction(self, p))
+        # standalone GC.  Baselines (TerarkDB/Titan) evaluate the garbage
+        # trigger only after a compaction completes (paper II-B); the
+        # Scavenger+ dynamic scheduler re-evaluates continuously (III-D).
+        if self.opts.kv_separation and self.opts.gc_mode == "standalone":
+            forced = stalled_for == "space"
+            if forced or self.opts.dynamic_scheduler or self._gc_check_pending:
+                self._gc_check_pending = False
+                while self.sched.can_admit(JOB_GC):
+                    victim = pick_gc_candidate(self, forced=forced)
+                    if victim is None:
+                        break
+                    if forced:
+                        self.stats_counters["forced_gc"] += 1
+                    self.sched.run_job(JOB_GC,
+                                       lambda v=victim: self._gc_body(v))
+        self._update_pressures()
+
+    def _gc_body(self, victim: VSSTMeta):
+        before = {c: self.device.stats.by_class[c].time_s
+                  for c in GC_STEP_CLASSES}
+        if self.opts.index_kind == "ka":
+            effects = run_gc_titan(self, victim)
+        else:
+            effects = run_gc_terark(self, victim)
+        for c in GC_STEP_CLASSES:
+            self.gc_step_time[c.value] += \
+                self.device.stats.by_class[c].time_s - before[c]
+        return effects
+
+    def _flush_body(self, imm: Memtable, wal: WAL):
+        opts = self.opts
+        ksst_writers: List[Tuple[int, dict]] = []
+        kw = KTableWriter(self.device, opts.block_bytes,
+                          dtable=(opts.ksst_format == "dtable"),
+                          bits_per_key=opts.bits_per_key)
+        vsst_metas: List[VSSTMeta] = []
+        vws: Dict[bool, Tuple[Optional[int], Optional[object]]] = {
+            True: (None, None), False: (None, None)}
+        flushed_bytes = 0
+
+        def _seal_v(hot: bool) -> None:
+            fid, w = vws[hot]
+            if w is not None and w.num_entries:
+                vsst_metas.append(self.finish_vsst(w, IOClass.FLUSH,
+                                                   fid=fid, is_hot=hot))
+            vws[hot] = (None, None)
+
+        def _vwriter(hot: bool):
+            fid, w = vws[hot]
+            if w is None or w.estimated_bytes >= opts.vsst_bytes:
+                _seal_v(hot)
+                fid = self.device.create()
+                w = self.new_vsst_writer()
+                vws[hot] = (fid, w)
+            return fid, w
+
+        for ukey, (seq, vtype, payload) in imm.sorted_items():
+            if (vtype == VT_VALUE and opts.kv_separation
+                    and len(payload) >= opts.sep_threshold):
+                hot = opts.dropcache and self.dropcache.is_hot(ukey)
+                vfid, vw = _vwriter(hot)
+                off, ln = vw.add(ukey, payload)
+                flushed_bytes += len(payload)
+                if opts.index_kind == "ka":
+                    entry = (ukey, seq, VT_INDEX_KA,
+                             encode_ka(vfid, off, ln))
+                else:
+                    entry = (ukey, seq, VT_INDEX_KF,
+                             encode_kf(vfid, len(payload)))
+            else:
+                entry = (ukey, seq, vtype, payload)
+            kw.add(entry)
+            if kw.estimated_bytes >= opts.ksst_bytes:
+                fid, props = kw.finish(IOClass.FLUSH)
+                flushed_bytes += props["file_size"]
+                ksst_writers.append((fid, props))
+                kw = KTableWriter(self.device, opts.block_bytes,
+                                  dtable=(opts.ksst_format == "dtable"),
+                                  bits_per_key=opts.bits_per_key)
+        _seal_v(True)
+        _seal_v(False)
+        if kw.num_entries:
+            fid, props = kw.finish(IOClass.FLUSH)
+            flushed_bytes += props["file_size"]
+            ksst_writers.append((fid, props))
+
+        def effects(elapsed: float = 0.0) -> None:
+            metas = [self.make_ksst_meta(fid, props, 0)
+                     for fid, props in ksst_writers]
+            self.versions.log_and_apply({
+                "add_ksst": [(0, m) for m in metas],
+                "add_vsst": vsst_metas,
+            })
+            if self.immutables and self.immutables[0][0] is imm:
+                self.immutables.pop(0)
+            else:   # defensive: remove wherever it is
+                self.immutables = [(m, w) for m, w in self.immutables
+                                   if m is not imm]
+            wal.close()
+            self.versions.log_edit({"wal_done": wal.fid})
+            if wal.fid in self.versions.pending_wals:
+                self.versions.pending_wals.remove(wal.fid)
+            self.stats_counters["flushes"] += 1
+            self.sched.note_flush(flushed_bytes, max(elapsed, 1e-9))
+            self.after_background()
+
+        return effects
+
+    def after_background(self) -> None:
+        self._update_pressures()
+        self.maybe_schedule_background()
+
+    # ==================================================================
+    # Pressures & stats (paper eqs. 4-6)
+    # ==================================================================
+
+    def pressures(self) -> Tuple[float, float]:
+        t = self.opts.level_multiplier
+        nl = max(1, self.versions.num_nonempty_levels())
+        ideal_index = 1.0 + sum(1.0 / t ** i for i in range(1, nl))
+        p_index = self.versions.s_index() - ideal_index
+        rg = self.opts.garbage_ratio
+        p_value = self.versions.exposed_ratio() - rg / (1.0 - rg)
+        return p_index, p_value
+
+    def _update_pressures(self) -> None:
+        p_i, p_v = self.pressures()
+        self.sched.update_allocation(p_i, p_v)
+
+    def drain(self, max_sim_s: float = 1e9) -> None:
+        """Let all in-flight background work complete (quiesce)."""
+        guard = 0
+        while self.sched.wait_for_event():
+            guard += 1
+            if guard > 1_000_000 or self.clock.now > max_sim_s:
+                break
+
+    def flush_all(self) -> None:
+        """Force-rotate the active memtable and flush everything."""
+        if len(self.mem):
+            self._rotate_memtable()
+        self.maybe_schedule_background()
+        self.drain()
+
+    def space_usage(self) -> Dict[str, float]:
+        tot_v, live_v = self.versions.value_stats()
+        lvl = self.versions.index_level_sizes()
+        return {
+            "total_bytes": self.device.total_bytes(),
+            "index_bytes": sum(lvl),
+            "index_level_bytes": lvl,
+            "value_total_bytes": tot_v,
+            "value_live_bytes": live_v,
+            "s_index": self.versions.s_index(),
+            "exposed_ratio": self.versions.exposed_ratio(),
+            "global_garbage_ratio": self.versions.global_garbage_ratio(),
+        }
+
+    def stats(self) -> Dict[str, object]:
+        p_i, p_v = self.pressures()
+        return {
+            "sim_time_s": self.clock.now,
+            "space": self.space_usage(),
+            "io": self.device.stats.snapshot(),
+            "counters": dict(self.stats_counters),
+            "gc_step_time_s": dict(self.gc_step_time),
+            "cache_hit_ratio": self.cache.hit_ratio,
+            "pressure_index": p_i,
+            "pressure_value": p_v,
+            "max_gc_threads": self.sched.max_gc,
+            "gc_bw_fraction": self.sched.gc_write_limiter.fraction,
+            "dropcache": {"size": len(self.dropcache),
+                          "inserts": self.dropcache.inserts,
+                          "hit_rate": (self.dropcache.hits /
+                                       max(1, self.dropcache.queries))},
+        }

@@ -1,0 +1,198 @@
+"""Background job scheduling: lanes, event pump, dynamic GC thread
+allocation (paper eqs. 4-6) and GC bandwidth throttling (paper III-D.2).
+
+The engine is a discrete-event simulation over the device's simulated
+clock: background jobs execute their real work eagerly (so data structures
+are exact) while their I/O time is accumulated into a *job duration*; the
+job's **effects** (version edits, file deletions) apply when the clock
+reaches the job's completion time on its assigned lane.  This models lane
+(thread) contention, stalls and scheduling policy without OS threads —
+deterministic and unit-testable.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, List, Optional, Tuple
+
+from ..store.device import BlockDevice, Clock, RateLimiter
+
+JOB_FLUSH = "flush"
+JOB_COMPACTION = "compaction"
+JOB_GC = "gc"
+
+
+class JobClock:
+    """Context manager that redirects device time charges into a local
+    accumulator while a background job body runs."""
+
+    def __init__(self, device: BlockDevice) -> None:
+        self.device = device
+        self._sink = [0.0]
+
+    @property
+    def elapsed(self) -> float:
+        return self._sink[0]
+
+    def __enter__(self) -> "JobClock":
+        self._outer = self.device.clock.sink
+        self.device.clock.sink = self._sink
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.device.clock.sink = self._outer
+        if self._outer is not None:      # nested job: charge parent too
+            self._outer[0] += self._sink[0]
+
+
+class Lanes:
+    """A pool of background execution lanes with per-kind admission."""
+
+    def __init__(self, n: int) -> None:
+        self.free_at = [0.0] * n
+
+    def earliest(self) -> int:
+        return min(range(len(self.free_at)), key=lambda i: self.free_at[i])
+
+    def busy_count(self, now: float) -> int:
+        return sum(1 for t in self.free_at if t > now)
+
+    def schedule(self, now: float, duration: float) -> float:
+        i = self.earliest()
+        start = max(now, self.free_at[i])
+        end = start + duration
+        self.free_at[i] = end
+        return end
+
+
+class Scheduler:
+    """Owns the event heap and the compaction/GC admission policy."""
+
+    def __init__(self, clock: Clock, device: BlockDevice, opts) -> None:
+        self.clock = clock
+        self.device = device
+        self.opts = opts
+        self.flush_lanes = Lanes(opts.flush_lanes)
+        self.bg_lanes = Lanes(opts.n_threads)
+        self._events: List[Tuple[float, int, Callable[[], None]]] = []
+        self._counter = itertools.count()
+        self.active = {JOB_FLUSH: 0, JOB_COMPACTION: 0, JOB_GC: 0}
+        self.max_gc = max(1, opts.n_threads // 2)   # TerarkDB static default
+        # bandwidth governor state (paper III-D.2)
+        self.gc_write_limiter = RateLimiter(clock, device.cost.write_bw)
+        self.gc_read_limiter = RateLimiter(clock, device.cost.read_bw)
+        device.gc_write_limiter = self.gc_write_limiter
+        device.gc_read_limiter = self.gc_read_limiter
+        self._flush_bw_avg: Optional[float] = None
+        self._win_start = 0.0
+        self._win_flush_bytes = 0
+        self._win_write_bytes = 0
+        self._win_flush_time = 0.0
+        self.throttle_events = 0
+
+    # ------------------------------------------------------------------
+    def run_job(self, kind: str, body: Callable[[], Callable[[], None]],
+                ) -> float:
+        """Execute ``body`` now (real work, time into a JobClock), schedule
+        its returned effects at lane completion time.  Returns end time."""
+        self.active[kind] += 1
+        with JobClock(self.device) as jc:
+            effects = body()
+        lanes = self.flush_lanes if kind == JOB_FLUSH else self.bg_lanes
+        end = lanes.schedule(self.clock.now, jc.elapsed)
+        elapsed = jc.elapsed
+
+        def _complete() -> None:
+            self.active[kind] -= 1
+            effects(elapsed)
+
+        heapq.heappush(self._events, (end, next(self._counter), _complete))
+        return end
+
+    def pump(self) -> bool:
+        """Apply all effects due at or before the current clock."""
+        ran = False
+        while self._events and self._events[0][0] <= self.clock.now:
+            _, _, fn = heapq.heappop(self._events)
+            fn()
+            ran = True
+        return ran
+
+    def next_event_time(self) -> Optional[float]:
+        return self._events[0][0] if self._events else None
+
+    def wait_for_event(self) -> bool:
+        """Advance the clock to the next completion (used during stalls)."""
+        t = self.next_event_time()
+        if t is None:
+            return False
+        self.clock.advance_to(t)
+        self.pump()
+        return True
+
+    # -- admission -------------------------------------------------------
+    def can_admit(self, kind: str) -> bool:
+        now = self.clock.now
+        if kind == JOB_FLUSH:
+            return self.active[JOB_FLUSH] < self.opts.flush_lanes
+        total = self.active[JOB_COMPACTION] + self.active[JOB_GC]
+        if total >= self.opts.n_threads:
+            return False
+        if kind == JOB_GC:
+            return self.active[JOB_GC] < self.max_gc
+        return self.active[JOB_COMPACTION] < self.opts.n_threads - \
+            (self.max_gc if self.opts.dynamic_scheduler else 0) or \
+            self.active[JOB_COMPACTION] < max(1, self.opts.n_threads - self.max_gc)
+
+    # -- dynamic thread allocation (paper eq. 4-6) -------------------------
+    def update_allocation(self, p_index: float, p_value: float) -> None:
+        if not self.opts.dynamic_scheduler:
+            return
+        eps = 1e-6
+        p_i = max(p_index, 0.0) + eps
+        p_v = max(p_value, 0.0) + eps
+        n = self.opts.n_threads
+        self.max_gc = int(round(n * p_v / (p_i + p_v)))
+        self.max_gc = max(1, min(n - 1, self.max_gc))
+
+    # -- bandwidth governor (paper III-D.2) --------------------------------
+    def note_flush(self, nbytes: int, duration: float) -> None:
+        self._win_flush_bytes += nbytes
+        self._win_flush_time += duration
+
+    def note_write(self, nbytes: int) -> None:
+        self._win_write_bytes += nbytes
+
+    def govern_bandwidth(self) -> None:
+        if not self.opts.dynamic_scheduler:
+            return
+        now = self.clock.now
+        win = now - self._win_start
+        if win < self.opts.rate_window_s:
+            return
+        write_util = self._win_write_bytes / (win * self.device.cost.write_bw)
+        flush_bw = (self._win_flush_bytes / self._win_flush_time
+                    if self._win_flush_time > 0 else None)
+        if flush_bw is not None:
+            if self._flush_bw_avg is None:
+                self._flush_bw_avg = flush_bw
+            else:
+                self._flush_bw_avg = 0.8 * self._flush_bw_avg + 0.2 * flush_bw
+        degraded = (flush_bw is not None and self._flush_bw_avg is not None
+                    and flush_bw < 0.8 * self._flush_bw_avg)
+        if write_util > 0.8 and degraded:
+            self.gc_write_limiter.set_fraction(
+                self.gc_write_limiter.fraction - self.opts.rate_limit_step)
+            self.gc_read_limiter.set_fraction(
+                self.gc_read_limiter.fraction - self.opts.rate_limit_step)
+            self.throttle_events += 1
+        else:
+            self.gc_write_limiter.set_fraction(
+                min(1.0, self.gc_write_limiter.fraction + 0.05))
+            self.gc_read_limiter.set_fraction(
+                min(1.0, self.gc_read_limiter.fraction + 0.05))
+        self._win_start = now
+        self._win_flush_bytes = 0
+        self._win_write_bytes = 0
+        self._win_flush_time = 0.0

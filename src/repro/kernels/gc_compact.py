@@ -1,0 +1,59 @@
+"""GC page compaction — the paper's adaptive-readahead insight on TPU.
+
+Scavenger+ (III-B.4) batches GC validity results into a bitmap and copies
+*contiguous runs* of live records with single large reads instead of one
+I/O per record.  On TPU the analogous tier is the HBM page pool of the
+serving KV-cache: compacting live pages with one DMA per multi-page run
+instead of one gather per page.
+
+The host (``ops.compact_plan``) turns the valid bitmap into a run-coalesced
+copy plan at a fixed block granularity; the kernel is a pure data-mover
+whose BlockSpec index map dereferences the scalar-prefetched source-block
+ids — each grid step is exactly one (block_pages · page · D) DMA.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(src_ids_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_pages", "interpret"))
+def gather_page_blocks(pool, src_block_ids, block_pages: int = 1,
+                       interpret: bool = False):
+    """pool: (P, page, D); src_block_ids: (M,) int32 — id of each source
+    block of ``block_pages`` consecutive pages.  Returns
+    (M * block_pages, page, D) gathered pages.
+
+    With block_pages > 1 the DMA granularity grows accordingly — the
+    kernel issues M DMAs instead of M · block_pages (the coalescing win
+    measured in benchmarks/bench_kernels.py).
+    """
+    p_total, page, d = pool.shape
+    m = src_block_ids.shape[0]
+    assert p_total % block_pages == 0
+    pool_b = pool.reshape(p_total // block_pages, block_pages * page, d)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(m,),
+            in_specs=[pl.BlockSpec((None, block_pages * page, d),
+                                   lambda i, ids: (ids[i], 0, 0))],
+            out_specs=pl.BlockSpec((None, block_pages * page, d),
+                                   lambda i, ids: (i, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, block_pages * page, d),
+                                       pool.dtype),
+        interpret=interpret,
+    )(src_block_ids.astype(jnp.int32), pool_b)
+    return out.reshape(m * block_pages, page, d)

@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the single source of truth for kernel semantics; tests sweep
+shapes/dtypes and assert_allclose kernels (interpret mode on CPU) against
+these functions.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True) -> jax.Array:
+    """q: (B, S, H, D); k/v: (B, S, Hkv, D) with H % Hkv == 0."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / math.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, d)
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, lengths) -> jax.Array:
+    """Decode attention against a paged KV pool.
+
+    q: (B, H, D) one query token per sequence;
+    k_pool/v_pool: (P, page_size, Hkv, D);
+    page_table: (B, max_pages) int32 (entries < 0 are unmapped);
+    lengths: (B,) valid token count per sequence.
+    Returns (B, H, D).
+    """
+    b, h, d = q.shape
+    p_total, page_size, hkv, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    g = h // hkv
+    safe_table = jnp.maximum(page_table, 0)
+    k = k_pool[safe_table]                     # (B, max_pages, page, Hkv, D)
+    v = v_pool[safe_table]
+    k = k.reshape(b, max_pages * page_size, hkv, d)
+    v = v.reshape(b, max_pages * page_size, hkv, d)
+    pos = jnp.arange(max_pages * page_size)[None]
+    valid = (pos < lengths[:, None]) & \
+        (jnp.repeat(page_table, page_size, axis=1) >= 0)
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k) / math.sqrt(d)
+    scores = jnp.where(valid[:, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, v)
+    return out.reshape(b, h, d)
+
+
+def ssd_scan_ref(x, dt, a, bmat, cmat,
+                 initial_state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence (the definitional oracle).
+
+    x: (B, S, H, P); dt: (B, S, H); a: (H,) < 0; bmat/cmat: (B, S, N).
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32)
+              if initial_state is None else initial_state)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                  # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * a)               # (B,H)
+        state = state * decay[..., None, None] + \
+            (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    final, ys = jax.lax.scan(
+        step, state0,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def gather_pages_ref(pool, idx) -> jax.Array:
+    """pool: (P, page, D); idx: (M,) int32 → (M, page, D)."""
+    return pool[idx]
+
+
+def compact_pages_ref(pool, valid) -> Tuple[jax.Array, jax.Array]:
+    """Reference GC compaction: keep pages where valid, packed densely at
+    the front (order-preserving).  Returns (new_pool, new_index_of_old)
+    where new_index_of_old[i] = destination of page i or -1 if dropped."""
+    p = pool.shape[0]
+    dst = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    new_index = jnp.where(valid, dst, -1)
+    order = jnp.argsort(~valid, stable=True)   # valid pages first
+    packed = pool[order]
+    return packed, new_index

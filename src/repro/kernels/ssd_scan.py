@@ -1,0 +1,104 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+Grid: (B·H, n_chunks) with chunks innermost (sequential).  Each step
+computes the intra-chunk block (dense matmuls → MXU) and carries the
+(P, N) inter-chunk state in VMEM scratch — the recurrence never leaves
+the core.  Mirrors ``repro.models.ssm.ssd_chunked`` / ``ref.ssd_scan_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+            state_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[...].astype(jnp.float32)           # (cl, P)
+    dt = dt_ref[...].astype(jnp.float32)         # (cl,)
+    a = a_ref[0].astype(jnp.float32)             # scalar (this head)
+    bm = b_ref[...].astype(jnp.float32)          # (cl, N)
+    cm = c_ref[...].astype(jnp.float32)          # (cl, N)
+
+    dA = dt * a                                  # (cl,)
+    dA_cs = jnp.cumsum(dA)                       # (cl,)
+    # intra-chunk decay matrix L[i,j] = exp(dA_cs_i - dA_cs_j), i >= j
+    diff = dA_cs[:, None] - dA_cs[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+
+    xdt = x * dt[:, None]                        # (cl, P)
+    scores = cm @ bm.T                           # (cl, cl)
+    y_diag = (scores * L) @ xdt                  # (cl, P)
+
+    # inter-chunk: contribution of the carried state
+    in_decay = jnp.exp(dA_cs)                    # (cl,)
+    prev = state_ref[...]                        # (P, N)
+    y_off = (cm @ prev.T) * in_decay[:, None]    # (cl, P)
+    y_ref[...] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: state = state * exp(ΣdA) + Σ_j decay_j dt_j x_j ⊗ B_j
+    total = dA_cs[-1]
+    state_decay = jnp.exp(total - dA_cs)         # (cl,)
+    new_state = prev * jnp.exp(total) + \
+        (xdt * state_decay[:, None]).T @ bm      # (P, N)
+    state_ref[...] = new_state
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        state_out_ref[...] = new_state.astype(state_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, bmat, cmat, chunk: int = 128,
+             interpret: bool = False):
+    """x: (B, S, H, P); dt: (B, S, H); a: (H,); b/cmat: (B, S, N).
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N))."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    # flatten (B, H) into one grid axis; rearrange inputs accordingly
+    xf = jnp.moveaxis(x, 2, 1).reshape(b * h, s, p)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(b * h, s)
+    af = jnp.tile(a, b)                                    # (B*H,)
+    bf = jnp.repeat(bmat, h, axis=0).reshape(b, h, s, n) \
+        if False else jnp.broadcast_to(bmat[:, None], (b, h, s, n)) \
+        .reshape(b * h, s, n)
+    cf = jnp.broadcast_to(cmat[:, None], (b, h, s, n)).reshape(b * h, s, n)
+
+    grid = (b * h, nc)
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((None, chunk), lambda i, c: (i, c)),
+            pl.BlockSpec((1,), lambda i, c: (i,)),
+            pl.BlockSpec((None, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((None, chunk, n), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((None, p, n), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((b * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+    y = jnp.moveaxis(y.reshape(b, h, s, p), 1, 2)
+    return y, state.reshape(b, h, p, n)

@@ -1,0 +1,7 @@
+"""Model zoo: dense/MoE transformers, Mamba-2 SSD, Jamba hybrid,
+encoder-only audio, and VLM backbones (frontends stubbed per assignment)."""
+
+from .config import ModelConfig
+from .registry import get_model
+
+__all__ = ["ModelConfig", "get_model"]

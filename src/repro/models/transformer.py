@@ -1,0 +1,177 @@
+"""Decoder-only (and encoder-only) transformer LM.
+
+Layers are scanned (stacked parameters, ``jax.lax.scan``) which keeps the
+HLO size O(1) in depth — essential for the 64-layer dry-runs — and gives
+the remat policy a natural boundary.  Covers families: dense, moe, vlm
+(M-RoPE positions), audio (encoder-only, frame-embedding inputs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .modules import (ParamSpec, attention_specs, axes_tree, ffn,
+                      ffn_specs, gqa_attention, materialize, norm)
+
+Params = Dict[str, Any]
+
+
+def _stack_specs(layer: Params, n: int) -> Params:
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            s.scale, s.dtype),
+        layer, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def specs(cfg: ModelConfig) -> Params:
+    layer = {
+        "attn_norm": ParamSpec((cfg.d_model,), ("embed",)),
+        "attn": attention_specs(cfg),
+        "ffn_norm": ParamSpec((cfg.d_model,), ("embed",)),
+        "ffn": ffn_specs(cfg),
+    }
+    p: Params = {"layers": _stack_specs(layer, cfg.n_layers),
+                 "final_norm": ParamSpec((cfg.d_model,), ("embed",)),
+                 "unembed": ParamSpec((cfg.d_model, cfg.vocab),
+                                      ("embed", "vocab"))}
+    if cfg.frontend == "none":
+        p["embed"] = ParamSpec((cfg.vocab, cfg.d_model),
+                               ("vocab_in", "embed_in"))
+    else:
+        # audio/vlm frontends are stubs: inputs arrive as precomputed
+        # frame/patch embeddings; a linear adapter stands in for the tower.
+        p["adapter"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                 ("embed", "embed2"))
+    return p
+
+
+def init(cfg: ModelConfig, rng: Optional[jax.Array] = None,
+         abstract: bool = False) -> Params:
+    return materialize(specs(cfg), rng, abstract, cfg.param_dtype)
+
+
+def logical_axes(cfg: ModelConfig) -> Params:
+    return axes_tree(specs(cfg))
+
+
+def _layer(cfg: ModelConfig, x, lp: Params, positions, causal: bool):
+    from ..parallel.ctx import constrain
+    x = constrain(x, ("act_batch", None, None))
+    h, _ = gqa_attention(lp["attn"], norm(x, lp["attn_norm"], cfg),
+                         positions, cfg, causal=causal)
+    x = constrain(x + h, ("act_batch", None, None))
+    x = x + ffn(lp["ffn"], norm(x, lp["ffn_norm"], cfg), cfg)
+    return constrain(x, ("act_batch", None, None))
+
+
+def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict) -> jax.Array:
+    if cfg.frontend == "none":
+        x = params["embed"].astype(cfg.compute_dtype)[batch["tokens"]]
+    else:
+        x = batch["frames"].astype(cfg.compute_dtype) @ \
+            params["adapter"].astype(cfg.compute_dtype)
+    return x
+
+
+def forward(params: Params, batch: Dict, cfg: ModelConfig) -> jax.Array:
+    """batch: tokens (B,S) or frames (B,S,D); positions (B,S) or (B,S,3).
+    Returns logits (B,S,V)."""
+    x = _embed_inputs(params, cfg, batch)
+    positions = batch["positions"]
+
+    def body(carry, lp):
+        y = _layer(cfg, carry, lp, positions, cfg.causal)
+        return y, None
+
+    body_fn = body
+    if cfg.remat == "full":
+        body_fn = jax.checkpoint(body)
+    elif cfg.remat == "dots_with_no_batch_dims":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies
+            .dots_with_no_batch_dims_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = body_fn(x, lp)
+    x = norm(x, params["final_norm"], cfg)
+    return jnp.einsum("bsd,dv->bsv", x,
+                      params["unembed"].astype(cfg.compute_dtype))
+
+
+def loss_fn(params: Params, batch: Dict, cfg: ModelConfig) -> jax.Array:
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    targets = batch["targets"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1).squeeze(-1)
+    mask = (targets >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Decode with a dense KV cache (the dry-run serve_step contract).
+# The paged-pool cache used by repro.serving implements the same math
+# against gathered pages (see serving/kvcache.py + kernels/paged_attention).
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               abstract: bool = False):
+    dtype = cfg.kv_cache_dtype or cfg.compute_dtype
+    shape = (cfg.n_layers, 2, batch, max_seq, cfg.kv_heads, cfg.head_dim)
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def decode_step(params: Params, cache, lengths, tokens, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    """One-token decode.  cache: (L,2,B,S,kvH,hd); lengths (B,) current
+    sequence lengths; tokens (B,1).  Returns (logits, new_cache)."""
+    b = tokens.shape[0]
+    max_seq = cache.shape[3]
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]      # (B,1,D)
+    positions = lengths[:, None]                               # (B,1)
+    if cfg.rope == "mrope":
+        positions = jnp.repeat(positions[..., None], 3, axis=-1)
+    kv_pos = jnp.arange(max_seq)[None, :]
+    kv_pos = jnp.where(kv_pos <= lengths[:, None], kv_pos, -1)  # (B,S)
+
+    def body(carry, packed):
+        x, layer_i = carry
+        lp, layer_cache = packed
+        xn = norm(x, lp["attn_norm"], cfg)
+        # new k/v for this token
+        k_new = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wk"]) \
+            .astype(cfg.compute_dtype)
+        v_new = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wv"]) \
+            .astype(cfg.compute_dtype)
+        if cfg.rope == "rope":
+            from .modules import apply_rope
+            k_new = apply_rope(k_new, lengths[:, None], cfg.rope_theta)
+        elif cfg.rope == "mrope":
+            from .modules import apply_mrope
+            k_new = apply_mrope(k_new, positions, cfg.mrope_sections)
+        cdt = layer_cache.dtype
+        kc = layer_cache[0].at[jnp.arange(b), lengths].set(
+            k_new[:, 0].astype(cdt))
+        vc = layer_cache[1].at[jnp.arange(b), lengths].set(
+            v_new[:, 0].astype(cdt))
+        h, _ = gqa_attention(lp["attn"], xn, positions, cfg, causal=False,
+                             kv_override=(kc, vc), kv_positions=kv_pos)
+        x = x + h
+        x = x + ffn(lp["ffn"], norm(x, lp["ffn_norm"], cfg), cfg)
+        return (x, layer_i + 1), jnp.stack([kc, vc])
+
+    (x, _), new_cache = jax.lax.scan(
+        body, (x, 0), (params["layers"], cache))
+    x = norm(x, params["final_norm"], cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["unembed"].astype(cfg.compute_dtype))
+    return logits, new_cache

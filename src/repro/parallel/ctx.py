@@ -1,0 +1,41 @@
+"""Ambient logical-sharding context for activation constraints.
+
+Model code calls ``constrain(x, ("act_batch", None, None))``; inside a
+``with activation_rules(mesh, rules):`` scope this lowers to
+``with_sharding_constraint`` — pinning activations batch-sharded so the
+SPMD partitioner all-gathers FSDP weights per layer instead of
+all-reducing activation-sized partial sums.  Outside the scope it is a
+no-op (pure single-device execution, kernels, unit tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .sharding import Rules, spec_for
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh, rules: Rules):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x, axes: Tuple[Optional[str], ...]):
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

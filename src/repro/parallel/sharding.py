@@ -1,0 +1,113 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Parameters/activations/caches carry *logical* axis names; a rule table
+maps them to mesh axes.  Assignment is divisibility-checked per tensor —
+a logical axis whose dimension does not divide the mesh axis size falls
+back to replication (e.g. kv_heads=8 on a 16-way model axis).
+
+Default parallelism (DESIGN.md §5):
+  batch        → (pod, data)   data parallelism across pods
+  heads/mlp/vocab/expert → model   tensor / expert parallelism
+  embed        → data          FSDP: weights+optimizer sharded over DP
+  cache_seq    → model (decode_32k) or (data, model) (long_500k)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Rules = Dict[str, Union[str, Tuple[str, ...], None]]
+
+
+def default_rules(mesh: Mesh) -> Rules:
+    has_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    return {
+        "batch": batch_axes,
+        "seq": None,
+        "embed": "data",          # FSDP for params/optimizer state
+        "vocab_in": "model",      # embedding table (gather source)
+        "embed_in": "data",
+        "embed2": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "expert": "model",
+        "vocab": "model",
+        "layers": None,
+        "inner": "model",
+        "inner_all": "model",
+        "inner_conv": None,
+        "conv_k": None,
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "layers2": None,
+        "kv2": None,
+        "cache_seq": "model",
+        "pages": "data",
+        "act_embed": None,
+        "act_batch": batch_axes,
+    }
+
+
+def long_context_rules(mesh: Mesh) -> Rules:
+    """long_500k: batch=1 — shard the KV cache sequence over everything."""
+    r = default_rules(mesh)
+    r["batch"] = None
+    r["act_batch"] = None
+    has_pod = "pod" in mesh.axis_names
+    r["cache_seq"] = ("pod", "data", "model") if has_pod \
+        else ("data", "model")
+    return r
+
+
+def _axis_size(mesh: Mesh, axis: Union[str, Tuple[str, ...]]) -> int:
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             rules: Rules, mesh: Mesh) -> PartitionSpec:
+    """PartitionSpec for one tensor, divisibility-checked; a mesh axis is
+    used at most once per tensor (first logical dim wins)."""
+    assert len(shape) == len(axes), (shape, axes)
+    used = set()
+    entries = []
+    for dim, ax in zip(shape, axes):
+        target = rules.get(ax) if ax is not None else None
+        if target is None:
+            entries.append(None)
+            continue
+        taxes = (target,) if isinstance(target, str) else tuple(target)
+        taxes = tuple(a for a in taxes
+                      if a in mesh.axis_names and a not in used)
+        if not taxes or dim % _axis_size(mesh, taxes) != 0:
+            entries.append(None)
+            continue
+        used.update(taxes)
+        entries.append(taxes if len(taxes) > 1 else taxes[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def tree_specs(abstract_tree, axes_tree, rules: Rules, mesh: Mesh):
+    """PartitionSpec tree for an abstract (ShapeDtypeStruct) tree."""
+    return jax.tree.map(
+        lambda leaf, axes: spec_for(leaf.shape, axes, rules, mesh),
+        abstract_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def tree_shardings(abstract_tree, axes_tree, rules: Rules, mesh: Mesh):
+    specs = tree_specs(abstract_tree, axes_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))

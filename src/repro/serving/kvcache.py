@@ -1,0 +1,180 @@
+"""Paged KV-cache manager — Scavenger+ on HBM pages (DESIGN.md §2).
+
+Mapping of the paper's structures onto the serving tier:
+
+  value store (vSSTs)   → per-layer K/V page pools in device memory
+  index LSM-tree        → host page table (seq_id → page list)
+  garbage               → pages of finished/evicted sequences
+  hot/cold vSSTs        → ACTIVE vs FROZEN (paused/beam) sequence pools
+  exposed-garbage ratio → free-list fragmentation of the pool
+  GC (lazy read + adaptive readahead)
+                        → run-coalesced live-page compaction
+                          (kernels/gc_compact; one DMA per live run)
+
+Compaction keeps live pages dense at the front of the pool so admission
+of long prompts never fails on fragmentation; the scheduler triggers it
+with the paper's pressure arithmetic (serving/scheduler.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class PagedCacheConfig:
+    n_pages: int
+    page_size: int = 16
+    compact_block_pages: int = 4
+    use_pallas: bool = False       # True on TPU; interpret in tests
+    interpret: bool = True
+
+
+class PagedKVCache:
+    """Host-managed page table over device K/V pools for one layer stack."""
+
+    def __init__(self, cfg: ModelConfig, pc: PagedCacheConfig) -> None:
+        self.cfg = cfg
+        self.pc = pc
+        shape = (cfg.n_layers, 2, pc.n_pages, pc.page_size,
+                 cfg.kv_heads, cfg.head_dim)
+        self.pool = jnp.zeros(shape, cfg.compute_dtype)
+        self.free: List[int] = list(range(pc.n_pages - 1, -1, -1))
+        self.tables: Dict[int, List[int]] = {}      # seq -> page ids
+        self.lengths: Dict[int, int] = {}
+        self.frozen: Dict[int, bool] = {}           # cold sequences
+        self.compactions = 0
+        self.compaction_dmas = 0
+        self.alloc_failures = 0
+
+    # -- space accounting (paper eq. 5 analog) ---------------------------
+    @property
+    def used_pages(self) -> int:
+        return sum(len(v) for v in self.tables.values())
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    def fragmentation(self) -> float:
+        """Exposed-garbage analog: fraction of the *allocated prefix* of
+        the pool that is free (holes blocking contiguous growth)."""
+        if not self.tables:
+            return 0.0
+        hi = max((max(t) for t in self.tables.values() if t), default=-1)
+        if hi < 0:
+            return 0.0
+        live = self.used_pages
+        return 1.0 - live / (hi + 1)
+
+    # -- allocation -------------------------------------------------------
+    def add_sequence(self, seq_id: int, prompt_len: int) -> bool:
+        n = -(-max(prompt_len, 1) // self.pc.page_size)
+        if len(self.free) < n:
+            self.alloc_failures += 1
+            return False
+        self.tables[seq_id] = [self.free.pop() for _ in range(n)]
+        self.lengths[seq_id] = prompt_len
+        self.frozen[seq_id] = False
+        return True
+
+    def append_token(self, seq_id: int) -> bool:
+        """Reserve room for one more token; grabs a new page on boundary."""
+        ln = self.lengths[seq_id]
+        if ln % self.pc.page_size == 0 and ln > 0 or \
+                ln == self.pc.page_size * len(self.tables[seq_id]):
+            if not self.free:
+                self.alloc_failures += 1
+                return False
+            self.tables[seq_id].append(self.free.pop())
+        self.lengths[seq_id] = ln + 1
+        return True
+
+    def finish_sequence(self, seq_id: int) -> None:
+        """Completion turns the sequence's pages into reclaimable garbage
+        (freed immediately — 'exposed'); fragmentation may remain."""
+        for p in self.tables.pop(seq_id, []):
+            self.free.append(p)
+        self.lengths.pop(seq_id, None)
+        self.frozen.pop(seq_id, None)
+
+    def freeze(self, seq_id: int, frozen: bool = True) -> None:
+        self.frozen[seq_id] = frozen
+
+    # -- device-side views -------------------------------------------------
+    def page_table_array(self, seq_ids: List[int]) -> Tuple[jax.Array,
+                                                            jax.Array]:
+        max_pages = max((len(self.tables[s]) for s in seq_ids), default=1)
+        pt = np.full((len(seq_ids), max_pages), -1, np.int32)
+        ln = np.zeros((len(seq_ids),), np.int32)
+        for i, s in enumerate(seq_ids):
+            pages = self.tables[s]
+            pt[i, :len(pages)] = pages
+            ln[i] = self.lengths[s]
+        return jnp.asarray(pt), jnp.asarray(ln)
+
+    def write_token_kv(self, layer: int, seq_id: int, k, v) -> None:
+        """Write one token's K/V (kvH, hd) into the page pool."""
+        pos = self.lengths[seq_id] - 1
+        page = self.tables[seq_id][pos // self.pc.page_size]
+        slot = pos % self.pc.page_size
+        self.pool = self.pool.at[layer, 0, page, slot].set(
+            k.astype(self.pool.dtype))
+        self.pool = self.pool.at[layer, 1, page, slot].set(
+            v.astype(self.pool.dtype))
+
+    def attend(self, layer: int, seq_ids: List[int], q) -> jax.Array:
+        """Decode attention for the given sequences via the paged kernel.
+        q: (B, H, hd) → (B, H, hd)."""
+        pt, ln = self.page_table_array(seq_ids)
+        return ops.decode_attention(
+            q, self.pool[layer, 0], self.pool[layer, 1], pt, ln,
+            use_pallas=self.pc.use_pallas, interpret=self.pc.interpret)
+
+    # -- GC: run-coalesced compaction (paper III-B.4 on HBM) ---------------
+    def compact(self) -> int:
+        """Pack live pages to the front of the pool.
+
+        Hot/cold placement (paper III-B.3): ACTIVE sequences' pages are
+        packed before FROZEN ones, so the hot region stays dense and the
+        next compaction touches mostly-cold long-lived pages.
+        Returns the number of copy DMAs issued (coalescing metric)."""
+        valid = np.zeros(self.pc.n_pages, bool)
+        for s, pages in self.tables.items():
+            for p in pages:
+                valid[p] = True
+        order_hot = [p for s, t in self.tables.items()
+                     if not self.frozen.get(s) for p in t]
+        order_cold = [p for s, t in self.tables.items()
+                      if self.frozen.get(s) for p in t]
+        total_dmas = 0
+        # pool layout is (L, 2, P, ...): compact each (layer, kv) plane
+        # with the same mapping — compute the plan once.
+        _, new_index, dmas = ops.compact_pages(
+            self.pool[0, 0].reshape(self.pc.n_pages, self.pc.page_size, -1),
+            valid, block_pages=self.pc.compact_block_pages,
+            use_pallas=self.pc.use_pallas, interpret=self.pc.interpret)
+        new_index = np.asarray(new_index)
+        total_dmas = dmas * self.cfg.n_layers * 2
+        # apply the same permutation to the full pool in one gather
+        perm = np.arange(self.pc.n_pages)
+        for old, new in enumerate(new_index):
+            if new >= 0:
+                perm[new] = old
+        self.pool = self.pool[:, :, jnp.asarray(perm)]
+        # rewrite tables + free list
+        for s in self.tables:
+            self.tables[s] = [int(new_index[p]) for p in self.tables[s]]
+        n_live = int(valid.sum())
+        self.free = list(range(self.pc.n_pages - 1, n_live - 1, -1))
+        self.compactions += 1
+        self.compaction_dmas += total_dmas
+        return total_dmas

@@ -1,0 +1,12 @@
+"""Storage substrate: simulated block device, block cache, table formats,
+memtable/WAL.  See DESIGN.md §3."""
+
+from .blocks import BlockCache, BloomFilter
+from .device import (BlockDevice, Clock, CostModel, FSBlockDevice, IOClass,
+                     IOStats, RateLimiter)
+from .memtable import WAL, Memtable
+
+__all__ = [
+    "BlockCache", "BloomFilter", "BlockDevice", "Clock", "CostModel",
+    "FSBlockDevice", "IOClass", "IOStats", "RateLimiter", "WAL", "Memtable",
+]

@@ -1,0 +1,175 @@
+"""Block encoding, bloom filters and the priority block cache.
+
+The block cache follows RocksDB's two-queue design referenced by the paper
+(Section III-B.2): entries inserted with high priority live in a protected
+region that is evicted only after the low-priority region is exhausted —
+this is what keeps DTable *index-entry blocks* resident across GC-Lookups.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import struct
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+
+# --------------------------------------------------------------------------
+# varint + record coding
+# --------------------------------------------------------------------------
+
+def encode_varint(n: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = n & 0x7F
+        n >>= 7
+        if n:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def decode_varint(buf: bytes, pos: int) -> Tuple[int, int]:
+    shift = 0
+    result = 0
+    while True:
+        b = buf[pos]
+        pos += 1
+        result |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return result, pos
+        shift += 7
+
+
+def encode_record(key: bytes, value: bytes) -> bytes:
+    return encode_varint(len(key)) + key + encode_varint(len(value)) + value
+
+
+def decode_record(buf: bytes, pos: int) -> Tuple[bytes, bytes, int]:
+    klen, pos = decode_varint(buf, pos)
+    key = buf[pos:pos + klen]
+    pos += klen
+    vlen, pos = decode_varint(buf, pos)
+    value = buf[pos:pos + vlen]
+    pos += vlen
+    return key, value, pos
+
+
+# --------------------------------------------------------------------------
+# Bloom filter (10 bits/key default, double hashing over blake2b)
+# --------------------------------------------------------------------------
+
+class BloomFilter:
+    def __init__(self, bits: bytearray, k: int) -> None:
+        self.bits = bits
+        self.k = k
+
+    @staticmethod
+    def _hashes(key: bytes) -> Tuple[int, int]:
+        d = hashlib.blake2b(key, digest_size=16).digest()
+        return (int.from_bytes(d[:8], "little"),
+                int.from_bytes(d[8:], "little") | 1)
+
+    @classmethod
+    def build(cls, keys: List[bytes], bits_per_key: int = 10) -> "BloomFilter":
+        n = max(64, len(keys) * bits_per_key)
+        k = max(1, min(8, int(round(bits_per_key * 0.69))))
+        bits = bytearray((n + 7) // 8)
+        m = len(bits) * 8
+        for key in keys:
+            h1, h2 = cls._hashes(key)
+            for i in range(k):
+                b = (h1 + i * h2) % m
+                bits[b >> 3] |= 1 << (b & 7)
+        return cls(bits, k)
+
+    def may_contain(self, key: bytes) -> bool:
+        m = len(self.bits) * 8
+        if m == 0:
+            return True
+        h1, h2 = self._hashes(key)
+        for i in range(self.k):
+            b = (h1 + i * h2) % m
+            if not self.bits[b >> 3] & (1 << (b & 7)):
+                return False
+        return True
+
+    def encode(self) -> bytes:
+        return struct.pack("<B", self.k) + bytes(self.bits)
+
+    @classmethod
+    def decode(cls, data: bytes) -> "BloomFilter":
+        (k,) = struct.unpack_from("<B", data, 0)
+        return cls(bytearray(data[1:]), k)
+
+
+# --------------------------------------------------------------------------
+# Block cache
+# --------------------------------------------------------------------------
+
+class BlockCache:
+    """Byte-capacity LRU with a high-priority protected region.
+
+    ``high_ratio`` of the capacity is reserved for high-priority entries
+    (index / index-entry blocks).  Low-priority insertions never evict
+    high-priority residents; high-priority insertions may evict both.
+    """
+
+    def __init__(self, capacity_bytes: int, high_ratio: float = 0.5) -> None:
+        self.capacity = capacity_bytes
+        self.high_capacity = int(capacity_bytes * high_ratio)
+        self._low: "OrderedDict[Tuple[int, int], bytes]" = OrderedDict()
+        self._high: "OrderedDict[Tuple[int, int], bytes]" = OrderedDict()
+        self._low_bytes = 0
+        self._high_bytes = 0
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Tuple[int, int]) -> Optional[bytes]:
+        for q in (self._high, self._low):
+            v = q.get(key)
+            if v is not None:
+                q.move_to_end(key)
+                self.hits += 1
+                return v
+        self.misses += 1
+        return None
+
+    def put(self, key: Tuple[int, int], value: bytes, high_priority: bool = False) -> None:
+        size = len(value)
+        if size > self.capacity:
+            return
+        self.evict_key(key)
+        if high_priority:
+            self._high[key] = value
+            self._high_bytes += size
+            while self._high_bytes > self.high_capacity and self._high:
+                _, v = self._high.popitem(last=False)
+                self._high_bytes -= len(v)
+        else:
+            self._low[key] = value
+            self._low_bytes += size
+        low_cap = self.capacity - self._high_bytes
+        while self._low_bytes > low_cap and self._low:
+            _, v = self._low.popitem(last=False)
+            self._low_bytes -= len(v)
+
+    def evict_key(self, key: Tuple[int, int]) -> None:
+        v = self._low.pop(key, None)
+        if v is not None:
+            self._low_bytes -= len(v)
+        v = self._high.pop(key, None)
+        if v is not None:
+            self._high_bytes -= len(v)
+
+    def evict_file(self, fid: int) -> None:
+        for q, attr in ((self._low, "_low_bytes"), (self._high, "_high_bytes")):
+            dead = [k for k in q if k[0] == fid]
+            for k in dead:
+                setattr(self, attr, getattr(self, attr) - len(q.pop(k)))
+
+    @property
+    def hit_ratio(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0

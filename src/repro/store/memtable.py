@@ -1,0 +1,77 @@
+"""Memtable + write-ahead log.
+
+The memtable keeps the newest version per user key (single-writer engine,
+snapshot isolation is not required by the paper's workloads); a sorted-key
+cache is maintained lazily for flush and range scans.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from .blocks import decode_record, encode_record, encode_varint, decode_varint
+from .device import BlockDevice, IOClass
+from .format import VT_DELETE
+
+Versioned = Tuple[int, int, bytes]  # (seq, vtype, payload)
+
+
+class Memtable:
+    def __init__(self) -> None:
+        self._data: Dict[bytes, Versioned] = {}
+        self._sorted: Optional[List[bytes]] = None
+        self.approx_bytes = 0
+
+    def put(self, ukey: bytes, seq: int, vtype: int, payload: bytes) -> None:
+        old = self._data.get(ukey)
+        if old is None:
+            self._sorted = None
+            self.approx_bytes += len(ukey) + 16
+        else:
+            self.approx_bytes -= len(old[2])
+        self._data[ukey] = (seq, vtype, payload)
+        self.approx_bytes += len(payload)
+
+    def get(self, ukey: bytes) -> Optional[Versioned]:
+        return self._data.get(ukey)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def sorted_items(self) -> Iterator[Tuple[bytes, Versioned]]:
+        if self._sorted is None:
+            self._sorted = sorted(self._data)
+        for k in self._sorted:
+            yield k, self._data[k]
+
+
+class WAL:
+    """Append-only log; one per memtable, truncated after flush."""
+
+    def __init__(self, device: BlockDevice) -> None:
+        self.device = device
+        self.fid = device.create()
+
+    def append(self, ukey: bytes, seq: int, vtype: int, payload: bytes,
+               cls: IOClass = IOClass.WAL) -> None:
+        rec = (encode_varint(seq) + encode_varint(vtype)
+               + encode_record(ukey, payload))
+        self.device.append(self.fid, rec, cls)
+
+    def close(self) -> None:
+        self.device.delete(self.fid)
+
+    @staticmethod
+    def replay(device: BlockDevice, fid: int
+               ) -> Iterator[Tuple[bytes, int, int, bytes]]:
+        """Yield (ukey, seq, vtype, payload); used on crash recovery."""
+        buf = device.read_all(fid, IOClass.MANIFEST)
+        pos = 0
+        while pos < len(buf):
+            try:
+                seq, pos = decode_varint(buf, pos)
+                vtype, pos = decode_varint(buf, pos)
+                ukey, payload, pos = decode_record(buf, pos)
+            except IndexError:      # torn tail write — stop at last good rec
+                return
+            yield ukey, seq, vtype, payload

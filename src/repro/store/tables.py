@@ -1,0 +1,681 @@
+"""SSTable formats: BTable (baseline), DTable (kSST, index/record separated),
+RTable (vSST, dense per-record index) and LogTable (Titan/BlobDB blob file).
+
+All tables share a footer layout and msgpack-encoded metadata sections::
+
+    [sections ...][props][footer: <6Q B magic> = props_off, props_len,
+                                   idx_off, idx_len, aux_off, aux_len, type]
+
+Readers charge every device read to the :class:`~repro.store.device.IOClass`
+passed by the caller, so the same reader serves user gets (USER_READ),
+compaction scans (COMPACTION_READ) and GC (GC_READ / GC_LOOKUP) with proper
+attribution — that attribution is what Fig. 4's breakdown measures.
+"""
+
+from __future__ import annotations
+
+import struct
+from bisect import bisect_left
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+import msgpack
+
+from .blocks import BlockCache, BloomFilter, decode_record, encode_record
+from .device import BlockDevice, IOClass
+from .format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF, VT_VALUE,
+                     entry_value_size, entry_vsst, pack_ikey, unpack_ikey)
+
+FOOTER = struct.Struct("<6QBxxxxxxx")
+TABLE_BTABLE = 0
+TABLE_DTABLE = 1
+TABLE_RTABLE = 2
+TABLE_LOG = 3
+
+Entry = Tuple[bytes, int, int, bytes]  # (ukey, seq, vtype, payload)
+
+
+def _pack_entries_block(entries: List[Entry]) -> bytes:
+    out = bytearray()
+    for ukey, seq, vtype, payload in entries:
+        out += encode_record(pack_ikey(ukey, seq, vtype), payload)
+    return bytes(out)
+
+
+def _unpack_entries_block(buf: bytes) -> List[Entry]:
+    entries: List[Entry] = []
+    pos = 0
+    while pos < len(buf):
+        ikey, payload, pos = decode_record(buf, pos)
+        ukey, seq, vtype = unpack_ikey(ikey)
+        entries.append((ukey, seq, vtype, payload))
+    return entries
+
+
+class _SectionWriter:
+    """Accumulates blocks for one section, building a sparse index."""
+
+    def __init__(self, block_bytes: int) -> None:
+        self.block_bytes = block_bytes
+        self.blocks: List[bytes] = []
+        self.index: List[Tuple[bytes, bytes, int, int]] = []  # first,last,off,len
+        self._cur: List[Entry] = []
+        self._cur_bytes = 0
+
+    def add(self, e: Entry) -> None:
+        self._cur.append(e)
+        self._cur_bytes += len(e[0]) + len(e[3]) + 10
+        if self._cur_bytes >= self.block_bytes:
+            self._seal()
+
+    def _seal(self) -> None:
+        if not self._cur:
+            return
+        blk = _pack_entries_block(self._cur)
+        self.blocks.append(blk)
+        self.index.append((self._cur[0][0], self._cur[-1][0], -1, len(blk)))
+        self._cur = []
+        self._cur_bytes = 0
+
+    def finish(self, base_off: int) -> Tuple[bytes, List[Tuple[bytes, bytes, int, int]]]:
+        self._seal()
+        out = bytearray()
+        fixed = []
+        off = base_off
+        for blk, (fk, lk, _, ln) in zip(self.blocks, self.index):
+            out += blk
+            fixed.append((fk, lk, off, ln))
+            off += ln
+        return bytes(out), fixed
+
+
+class TableProps(dict):
+    """Table properties; notable keys:
+
+    num_entries, raw_key_bytes, raw_value_bytes,
+    compensated_bytes  — index bytes + referenced value bytes (paper III-C),
+    value_refs         — {vsst_fid: [entries, bytes]} dependency map
+                         (TerarkDB-style kSST→vSST dependencies),
+    table_type, smallest, largest.
+    """
+
+
+# ==========================================================================
+# Writers
+# ==========================================================================
+
+class KTableWriter:
+    """Writes kSSTs — BTable (mixed blocks) or DTable (separated sections).
+
+    DTable (paper Fig. 9a) keeps inline small-KV records in *data blocks*
+    and KA/KF index entries in *index-entry blocks* so GC-Lookup touches
+    only the latter.
+    """
+
+    def __init__(self, device: BlockDevice, block_bytes: int = 4096,
+                 dtable: bool = False, bits_per_key: int = 10) -> None:
+        self.device = device
+        self.dtable = dtable
+        self.bits_per_key = bits_per_key
+        self.data = _SectionWriter(block_bytes)
+        self.idxe = _SectionWriter(block_bytes) if dtable else self.data
+        self.keys_data: List[bytes] = []
+        self.keys_idxe: List[bytes] = []
+        self.num_entries = 0
+        self.raw_key_bytes = 0
+        self.raw_value_bytes = 0
+        self.compensated = 0
+        self.value_refs: Dict[int, List[int]] = {}
+        self.smallest: Optional[bytes] = None
+        self.largest: Optional[bytes] = None
+
+    def add(self, e: Entry) -> None:
+        ukey, seq, vtype, payload = e
+        if self.smallest is None:
+            self.smallest = ukey
+        self.largest = ukey
+        self.num_entries += 1
+        self.raw_key_bytes += len(ukey)
+        vsz = entry_value_size(vtype, payload)
+        self.raw_value_bytes += vsz
+        self.compensated += len(ukey) + len(payload) + vsz
+        if vtype in (VT_INDEX_KA, VT_INDEX_KF):
+            fid = entry_vsst(vtype, payload)
+            ref = self.value_refs.setdefault(fid, [0, 0])
+            ref[0] += 1
+            ref[1] += vsz
+            self.idxe.add(e)
+            # BTable keeps one mixed bloom; DTable blooms per section.
+            (self.keys_idxe if self.dtable else self.keys_data).append(ukey)
+        else:
+            self.data.add(e)
+            self.keys_data.append(ukey)
+
+    @property
+    def estimated_bytes(self) -> int:
+        return self.raw_key_bytes + self.raw_value_bytes + self.num_entries * 10
+
+    def finish(self, cls: IOClass = IOClass.FLUSH,
+               fid: Optional[int] = None) -> Tuple[int, TableProps]:
+        fid = self.device.create() if fid is None else fid
+        data_bytes, data_idx = self.data.finish(0)
+        sections = bytearray(data_bytes)
+        if self.dtable:
+            idxe_bytes, idxe_idx = self.idxe.finish(len(sections))
+            sections += idxe_bytes
+        else:
+            idxe_idx = []
+        bloom_d = BloomFilter.build(self.keys_data, self.bits_per_key).encode()
+        bloom_i = BloomFilter.build(self.keys_idxe, self.bits_per_key).encode() \
+            if self.dtable else b""
+        index_payload = msgpack.packb(
+            {"data": data_idx, "idxe": idxe_idx}, use_bin_type=True)
+        idx_off = len(sections)
+        sections += index_payload
+        aux = msgpack.packb({"bloom_d": bloom_d, "bloom_i": bloom_i},
+                            use_bin_type=True)
+        aux_off = len(sections)
+        sections += aux
+        props = TableProps(
+            num_entries=self.num_entries, raw_key_bytes=self.raw_key_bytes,
+            raw_value_bytes=self.raw_value_bytes, compensated_bytes=self.compensated,
+            value_refs={k: tuple(v) for k, v in self.value_refs.items()},
+            table_type=TABLE_DTABLE if self.dtable else TABLE_BTABLE,
+            smallest=self.smallest or b"", largest=self.largest or b"")
+        props_b = msgpack.packb(dict(props), use_bin_type=True)
+        props_off = len(sections)
+        sections += props_b
+        sections += FOOTER.pack(props_off, len(props_b), idx_off,
+                                len(index_payload), aux_off, len(aux),
+                                props["table_type"])
+        self.device.append(fid, bytes(sections), cls)
+        props["file_size"] = len(sections)
+        return fid, props
+
+
+class RTableWriter:
+    """vSST with a *dense* per-record index (paper Fig. 8a).
+
+    Records are `(key, value)` laid out back to back; the index holds one
+    ``(key, offset, length)`` tuple per record, split into partitions so GC
+    and point reads load only the partitions they need (partitioned index,
+    paper III-B.1).
+    """
+
+    def __init__(self, device: BlockDevice, index_partition: int = 64) -> None:
+        self.device = device
+        self.index_partition = index_partition
+        self.buf = bytearray()
+        self.dense: List[Tuple[bytes, int, int]] = []
+        self.total_value_bytes = 0
+
+    def add(self, ukey: bytes, value: bytes) -> Tuple[int, int]:
+        rec = encode_record(ukey, value)
+        off = len(self.buf)
+        self.buf += rec
+        self.dense.append((ukey, off, len(rec)))
+        self.total_value_bytes += len(value)
+        return off, len(rec)
+
+    @property
+    def estimated_bytes(self) -> int:
+        return len(self.buf)
+
+    @property
+    def num_entries(self) -> int:
+        return len(self.dense)
+
+    def finish(self, cls: IOClass = IOClass.FLUSH,
+               fid: Optional[int] = None) -> Tuple[int, TableProps]:
+        fid = self.device.create() if fid is None else fid
+        sections = bytearray(self.buf)
+        partitions: List[bytes] = []
+        top: List[Tuple[bytes, int, int]] = []
+        for i in range(0, len(self.dense), self.index_partition):
+            part = self.dense[i:i + self.index_partition]
+            pb = msgpack.packb(part, use_bin_type=True)
+            partitions.append(pb)
+            top.append((part[-1][0], -1, len(pb)))
+        idx_off = len(sections)
+        fixed_top = []
+        off = idx_off
+        for pb, (lk, _, ln) in zip(partitions, top):
+            sections += pb
+            fixed_top.append((lk, off, ln))
+            off += ln
+        top_b = msgpack.packb(fixed_top, use_bin_type=True)
+        top_off = len(sections)
+        sections += top_b
+        props = TableProps(
+            num_entries=len(self.dense), total_value_bytes=self.total_value_bytes,
+            data_bytes=len(self.buf), table_type=TABLE_RTABLE,
+            smallest=self.dense[0][0] if self.dense else b"",
+            largest=self.dense[-1][0] if self.dense else b"")
+        props_b = msgpack.packb(dict(props), use_bin_type=True)
+        props_off = len(sections)
+        sections += props_b
+        sections += FOOTER.pack(props_off, len(props_b), top_off, len(top_b),
+                                idx_off, 0, TABLE_RTABLE)
+        self.device.append(fid, bytes(sections), cls)
+        props["file_size"] = len(sections)
+        return fid, props
+
+
+class VBTableWriter:
+    """vSST in BlockBasedTable layout (TerarkDB baseline): values packed in
+    blocks with a *sparse* index — GC must read whole data blocks and cannot
+    lazily skip invalid values (the deficiency RTable fixes)."""
+
+    def __init__(self, device: BlockDevice, block_bytes: int = 16384) -> None:
+        self.device = device
+        self.block_bytes = block_bytes
+        self.blocks: List[List[Tuple[bytes, bytes]]] = [[]]
+        self._cur_bytes = 0
+        self.total_value_bytes = 0
+        self.n = 0
+
+    def add(self, ukey: bytes, value: bytes) -> Tuple[int, int]:
+        self.blocks[-1].append((ukey, value))
+        self._cur_bytes += len(ukey) + len(value) + 8
+        self.total_value_bytes += len(value)
+        self.n += 1
+        if self._cur_bytes >= self.block_bytes:
+            self.blocks.append([])
+            self._cur_bytes = 0
+        return -1, len(ukey) + len(value) + 8   # address resolved via key
+
+    @property
+    def estimated_bytes(self) -> int:
+        return self.total_value_bytes + self.n * 8
+
+    @property
+    def num_entries(self) -> int:
+        return self.n
+
+    def finish(self, cls: IOClass = IOClass.FLUSH,
+               fid: Optional[int] = None) -> Tuple[int, TableProps]:
+        fid = self.device.create() if fid is None else fid
+        sections = bytearray()
+        sparse: List[Tuple[bytes, bytes, int, int]] = []
+        smallest = largest = b""
+        for blk in self.blocks:
+            if not blk:
+                continue
+            payload = bytearray()
+            for k, v in blk:
+                payload += encode_record(k, v)
+            sparse.append((blk[0][0], blk[-1][0], len(sections), len(payload)))
+            sections += payload
+            if not smallest:
+                smallest = blk[0][0]
+            largest = blk[-1][0]
+        idx_b = msgpack.packb(sparse, use_bin_type=True)
+        idx_off = len(sections)
+        sections += idx_b
+        props = TableProps(num_entries=self.n,
+                           total_value_bytes=self.total_value_bytes,
+                           data_bytes=idx_off, table_type=TABLE_BTABLE,
+                           smallest=smallest, largest=largest)
+        props_b = msgpack.packb(dict(props), use_bin_type=True)
+        props_off = len(sections)
+        sections += props_b
+        sections += FOOTER.pack(props_off, len(props_b), idx_off, len(idx_b),
+                                0, 0, TABLE_BTABLE)
+        self.device.append(fid, bytes(sections), cls)
+        props["file_size"] = len(sections)
+        return fid, props
+
+
+class LogTableWriter:
+    """Unordered value log (WiscKey vLog / Titan blob file): records are
+    addressed by (offset, size) held in the KA index entries."""
+
+    def __init__(self, device: BlockDevice) -> None:
+        self.device = device
+        self.buf = bytearray()
+        self.n = 0
+        self.total_value_bytes = 0
+
+    def add(self, ukey: bytes, value: bytes) -> Tuple[int, int]:
+        rec = encode_record(ukey, value)
+        off = len(self.buf)
+        self.buf += rec
+        self.n += 1
+        self.total_value_bytes += len(value)
+        return off, len(rec)
+
+    @property
+    def estimated_bytes(self) -> int:
+        return len(self.buf)
+
+    @property
+    def num_entries(self) -> int:
+        return self.n
+
+    def finish(self, cls: IOClass = IOClass.FLUSH,
+               fid: Optional[int] = None) -> Tuple[int, TableProps]:
+        fid = self.device.create() if fid is None else fid
+        props = TableProps(num_entries=self.n, data_bytes=len(self.buf),
+                           total_value_bytes=self.total_value_bytes,
+                           table_type=TABLE_LOG, smallest=b"", largest=b"")
+        self.device.append(fid, bytes(self.buf), cls)
+        props["file_size"] = len(self.buf)
+        return fid, props
+
+
+# ==========================================================================
+# Readers
+# ==========================================================================
+
+class _Footer:
+    __slots__ = ("props_off", "props_len", "idx_off", "idx_len",
+                 "aux_off", "aux_len", "ttype")
+
+    def __init__(self, raw: bytes) -> None:
+        (self.props_off, self.props_len, self.idx_off, self.idx_len,
+         self.aux_off, self.aux_len, self.ttype) = FOOTER.unpack(raw)
+
+
+class KTableReader:
+    """Reader for kSSTs (BTable and DTable).
+
+    The ``cls`` argument of each method attributes the I/O: foreground gets
+    pass USER_READ, GC validity checks pass GC_LOOKUP (the paper's
+    GC-Lookup step), compaction passes COMPACTION_READ.
+    """
+
+    def __init__(self, device: BlockDevice, fid: int, cache: BlockCache,
+                 open_cls: IOClass = IOClass.USER_READ) -> None:
+        self.device = device
+        self.fid = fid
+        self.cache = cache
+        fsize = device.size(fid)
+        foot = _Footer(device.read(fid, fsize - FOOTER.size, FOOTER.size, open_cls))
+        self.ttype = foot.ttype
+        idx = msgpack.unpackb(
+            device.read(fid, foot.idx_off, foot.idx_len, open_cls), raw=False, strict_map_key=False)
+        self.data_idx = [(bytes(a), bytes(b), c, d) for a, b, c, d in idx["data"]]
+        self.idxe_idx = [(bytes(a), bytes(b), c, d) for a, b, c, d in idx["idxe"]]
+        aux = msgpack.unpackb(
+            device.read(fid, foot.aux_off, foot.aux_len, open_cls), raw=False, strict_map_key=False)
+        self.bloom_d = BloomFilter.decode(aux["bloom_d"]) if aux["bloom_d"] else None
+        self.bloom_i = BloomFilter.decode(aux["bloom_i"]) if aux["bloom_i"] else None
+        self.props = msgpack.unpackb(
+            device.read(fid, foot.props_off, foot.props_len, open_cls), raw=False, strict_map_key=False)
+
+    # -- block access ---------------------------------------------------
+    def _load_block(self, off: int, ln: int, cls: IOClass,
+                    high_priority: bool) -> List[Entry]:
+        ckey = (self.fid, off)
+        raw = self.cache.get(ckey)
+        if raw is None:
+            raw = self.device.read(self.fid, off, ln, cls)
+            self.cache.put(ckey, raw, high_priority=high_priority)
+        else:
+            self.device.charge_cpu()
+        return _unpack_entries_block(raw)
+
+    @staticmethod
+    def _find_block(index: List[Tuple[bytes, bytes, int, int]],
+                    ukey: bytes) -> Optional[Tuple[int, int]]:
+        lasts = [e[1] for e in index]
+        i = bisect_left(lasts, ukey)
+        if i >= len(index):
+            return None
+        first, _, off, ln = index[i]
+        return (off, ln)
+
+    def _get_in(self, index: List[Tuple[bytes, bytes, int, int]],
+                bloom: Optional[BloomFilter], ukey: bytes, cls: IOClass,
+                high_priority: bool) -> Optional[Entry]:
+        if bloom is not None and not bloom.may_contain(ukey):
+            self.device.charge_cpu()
+            return None
+        loc = self._find_block(index, ukey)
+        if loc is None:
+            return None
+        entries = self._load_block(loc[0], loc[1], cls, high_priority)
+        best: Optional[Entry] = None
+        for e in entries:
+            if e[0] == ukey and (best is None or e[1] > best[1]):
+                best = e
+        return best
+
+    def get(self, ukey: bytes, cls: IOClass = IOClass.USER_READ) -> Optional[Entry]:
+        if self.ttype == TABLE_DTABLE:
+            # Index-entry section first (it holds KA/KF entries, which is
+            # what both GC-Lookup and large-value foreground reads want),
+            # then the small-KV data section.
+            e1 = self._get_in(self.idxe_idx, self.bloom_i, ukey, cls, True)
+            e2 = self._get_in(self.data_idx, self.bloom_d, ukey, cls, False)
+            if e1 is None:
+                return e2
+            if e2 is None:
+                return e1
+            return e1 if e1[1] >= e2[1] else e2
+        return self._get_in(self.data_idx, self.bloom_d, ukey, cls, False)
+
+    def get_index_entry(self, ukey: bytes,
+                        cls: IOClass = IOClass.GC_LOOKUP) -> Optional[Entry]:
+        """GC-Lookup fast path: DTable probes only index-entry blocks
+        (cached high-priority); BTable must fall back to full get —
+        exactly the I/O asymmetry measured in Fig. 9/19."""
+        if self.ttype == TABLE_DTABLE:
+            return self._get_in(self.idxe_idx, self.bloom_i, ukey, cls, True)
+        return self.get(ukey, cls)
+
+    def iter_entries(self, cls: IOClass = IOClass.COMPACTION_READ) -> Iterator[Entry]:
+        """Full-table scan with sequential readahead: the whole section is
+        fetched in one device read (RocksDB compaction_readahead), charged
+        to ``cls`` and bypassing the block cache."""
+        if self.ttype == TABLE_DTABLE:
+            a = self._scan_section(self.data_idx, cls)
+            b = self._scan_section(self.idxe_idx, cls)
+            yield from _merge_sorted(a, b)
+        else:
+            yield from self._scan_section(self.data_idx, cls)
+
+    def _scan_section(self, index, cls: IOClass) -> Iterator[Entry]:
+        if not index:
+            return
+        start = index[0][2]
+        end = index[-1][2] + index[-1][3]
+        buf = self.device.read(self.fid, start, end - start, cls)
+        yield from _unpack_entries_block(buf)
+
+    def _iter_section(self, index, cls: IOClass, hp: bool) -> Iterator[Entry]:
+        for _, _, off, ln in index:
+            yield from self._load_block(off, ln, cls, hp)
+
+    def iter_from(self, start: bytes,
+                  cls: IOClass = IOClass.USER_READ) -> Iterator[Entry]:
+        """Seek-and-scan: skip blocks wholly before ``start``."""
+        def section(index, hp: bool) -> Iterator[Entry]:
+            lasts = [e[1] for e in index]
+            i = bisect_left(lasts, start)
+            for _, _, off, ln in index[i:]:
+                for e in self._load_block(off, ln, cls, hp):
+                    if e[0] >= start:
+                        yield e
+        if self.ttype == TABLE_DTABLE:
+            yield from _merge_sorted(section(self.data_idx, False),
+                                     section(self.idxe_idx, True))
+        else:
+            yield from section(self.data_idx, False)
+
+
+def _merge_sorted(a: Iterator[Entry], b: Iterator[Entry]) -> Iterator[Entry]:
+    """Merge two per-table sorted entry streams (ukey asc, seq desc)."""
+    ea = next(a, None)
+    eb = next(b, None)
+    while ea is not None or eb is not None:
+        if eb is None or (ea is not None and
+                          (ea[0], -ea[1]) <= (eb[0], -eb[1])):
+            yield ea  # type: ignore[misc]
+            ea = next(a, None)
+        else:
+            yield eb
+            eb = next(b, None)
+
+
+class RTableReader:
+    """Reader for RTable vSSTs: dense partitioned index → lazy value reads."""
+
+    def __init__(self, device: BlockDevice, fid: int, cache: BlockCache,
+                 open_cls: IOClass = IOClass.USER_READ) -> None:
+        self.device = device
+        self.fid = fid
+        self.cache = cache
+        fsize = device.size(fid)
+        foot = _Footer(device.read(fid, fsize - FOOTER.size, FOOTER.size, open_cls))
+        top = msgpack.unpackb(
+            device.read(fid, foot.idx_off, foot.idx_len, open_cls), raw=False, strict_map_key=False)
+        self.top = [(bytes(k), off, ln) for k, off, ln in top]
+        self.props = msgpack.unpackb(
+            device.read(fid, foot.props_off, foot.props_len, open_cls), raw=False, strict_map_key=False)
+
+    def _load_partition(self, off: int, ln: int, cls: IOClass
+                        ) -> List[Tuple[bytes, int, int]]:
+        ckey = (self.fid, off)
+        raw = self.cache.get(ckey)
+        if raw is None:
+            raw = self.device.read(self.fid, off, ln, cls)
+            self.cache.put(ckey, raw, high_priority=True)
+        else:
+            self.device.charge_cpu()
+        return [(bytes(k), o, l) for k, o, l in msgpack.unpackb(raw, raw=False, strict_map_key=False)]
+
+    def read_keys(self, cls: IOClass = IOClass.GC_READ
+                  ) -> List[Tuple[bytes, int, int]]:
+        """GC-Read step 1 under Lazy Read: fetch the dense index only —
+        all keys + record addresses, no value bytes (paper Fig. 8b).
+        Partitions are contiguous, so this is one sequential read."""
+        if not self.top:
+            return []
+        start = self.top[0][1]
+        end = self.top[-1][1] + self.top[-1][2]
+        buf = self.device.read(self.fid, start, end - start, cls)
+        out: List[Tuple[bytes, int, int]] = []
+        pos = 0
+        for _, off, ln in self.top:
+            part = msgpack.unpackb(buf[pos:pos + ln], raw=False,
+                                   strict_map_key=False)
+            pos += ln
+            out.extend((bytes(k), o, l) for k, o, l in part)
+        return out
+
+    def read_record(self, off: int, ln: int,
+                    cls: IOClass = IOClass.USER_READ) -> Tuple[bytes, bytes]:
+        buf = self.device.read(self.fid, off, ln, cls)
+        k, v, _ = decode_record(buf, 0)
+        return k, v
+
+    def read_span(self, off: int, ln: int,
+                  cls: IOClass = IOClass.GC_READ) -> List[Tuple[bytes, bytes]]:
+        """One coalesced read covering several contiguous records —
+        the adaptive-readahead primitive (paper III-B.4)."""
+        buf = self.device.read(self.fid, off, ln, cls)
+        out = []
+        pos = 0
+        while pos < len(buf):
+            k, v, pos = decode_record(buf, pos)
+            out.append((k, v))
+        return out
+
+    def get(self, ukey: bytes, cls: IOClass = IOClass.USER_READ
+            ) -> Optional[bytes]:
+        lasts = [t[0] for t in self.top]
+        i = bisect_left(lasts, ukey)
+        if i >= len(self.top):
+            return None
+        part = self._load_partition(self.top[i][1], self.top[i][2], cls)
+        keys = [p[0] for p in part]
+        j = bisect_left(keys, ukey)
+        if j < len(part) and part[j][0] == ukey:
+            _, off, ln = part[j]
+            return self.read_record(off, ln, cls)[1]
+        return None
+
+
+class VBTableReader:
+    """Reader for BTable-layout vSSTs (sparse index, block reads)."""
+
+    def __init__(self, device: BlockDevice, fid: int, cache: BlockCache,
+                 open_cls: IOClass = IOClass.USER_READ) -> None:
+        self.device = device
+        self.fid = fid
+        self.cache = cache
+        fsize = device.size(fid)
+        foot = _Footer(device.read(fid, fsize - FOOTER.size, FOOTER.size, open_cls))
+        idx = msgpack.unpackb(
+            device.read(fid, foot.idx_off, foot.idx_len, open_cls), raw=False, strict_map_key=False)
+        self.sparse = [(bytes(a), bytes(b), c, d) for a, b, c, d in idx]
+        self.props = msgpack.unpackb(
+            device.read(fid, foot.props_off, foot.props_len, open_cls), raw=False, strict_map_key=False)
+
+    def _load_block(self, off: int, ln: int, cls: IOClass
+                    ) -> List[Tuple[bytes, bytes]]:
+        ckey = (self.fid, off)
+        raw = self.cache.get(ckey)
+        if raw is None:
+            raw = self.device.read(self.fid, off, ln, cls)
+            self.cache.put(ckey, raw)
+        else:
+            self.device.charge_cpu()
+        out = []
+        pos = 0
+        while pos < len(raw):
+            k, v, pos = decode_record(raw, pos)
+            out.append((k, v))
+        return out
+
+    def get(self, ukey: bytes, cls: IOClass = IOClass.USER_READ
+            ) -> Optional[bytes]:
+        lasts = [e[1] for e in self.sparse]
+        i = bisect_left(lasts, ukey)
+        if i >= len(self.sparse):
+            return None
+        for k, v in self._load_block(self.sparse[i][2], self.sparse[i][3], cls):
+            if k == ukey:
+                return v
+        return None
+
+    def scan_all(self, cls: IOClass = IOClass.GC_READ
+                 ) -> List[Tuple[bytes, bytes]]:
+        """GC-Read without lazy read: the whole data region is fetched
+        (sequentially — but including every invalid value, which is the
+        deficiency Lazy Read removes)."""
+        if not self.sparse:
+            return []
+        end = self.sparse[-1][2] + self.sparse[-1][3]
+        buf = self.device.read(self.fid, 0, end, cls)
+        out = []
+        pos = 0
+        while pos < len(buf):
+            k, v, pos = decode_record(buf, pos)
+            out.append((k, v))
+        return out
+
+
+class LogTableReader:
+    """Reader for unordered value logs (Titan/WiscKey)."""
+
+    def __init__(self, device: BlockDevice, fid: int) -> None:
+        self.device = device
+        self.fid = fid
+
+    def read_record(self, off: int, ln: int,
+                    cls: IOClass = IOClass.USER_READ) -> Tuple[bytes, bytes]:
+        buf = self.device.read(self.fid, off, ln, cls)
+        k, v, _ = decode_record(buf, 0)
+        return k, v
+
+    def scan_all(self, cls: IOClass = IOClass.GC_READ
+                 ) -> List[Tuple[bytes, bytes, int, int]]:
+        buf = self.device.read_all(self.fid, cls)
+        out = []
+        pos = 0
+        while pos < len(buf):
+            start = pos
+            k, v, pos = decode_record(buf, pos)
+            out.append((k, v, start, pos - start))
+        return out

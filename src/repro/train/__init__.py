@@ -1,0 +1,8 @@
+"""Training substrate: AdamW (ZeRO-sharded), step builders, data pipeline."""
+
+from .optimizer import AdamWConfig, apply_updates, init_state
+from .step import (TrainConfig, build_decode_step, build_prefill_step,
+                   build_train_step)
+
+__all__ = ["AdamWConfig", "apply_updates", "init_state", "TrainConfig",
+           "build_decode_step", "build_prefill_step", "build_train_step"]

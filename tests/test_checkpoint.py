@@ -1,0 +1,50 @@
+"""Checkpoint store: round-trip, retention GC, crash recovery, elastic
+restore into a 'like' tree."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointConfig, CheckpointStore
+
+
+def test_roundtrip_retention_and_recovery(tmp_path):
+    root = str(tmp_path / "ckpt")
+    st = CheckpointStore(root, CheckpointConfig(keep_last=2))
+    tree = {"w": np.arange(300000, dtype=np.float32).reshape(100, 3000),
+            "b": {"x": np.ones((7,), np.float32)}}
+    for step in (10, 20, 30):
+        tree["w"] = tree["w"] + step
+        st.save(step, tree, extra={"loss": 1.0 / step})
+    assert st.steps() == [20, 30]          # keep_last=2 enforced
+
+    s, flat = st.restore()
+    assert s == 30
+    np.testing.assert_array_equal(flat["w"], tree["w"])
+    np.testing.assert_array_equal(flat["b/x"], tree["b"]["x"])
+
+    s, nested = st.restore(like=tree)
+    np.testing.assert_array_equal(nested["b"]["x"], tree["b"]["x"])
+
+    # deleted checkpoints become garbage the engine reclaims
+    st.db.flush_all()
+    assert st.db.space_usage()["global_garbage_ratio"] < 0.3
+
+    # crash restart: new process opens the same directory
+    st2 = CheckpointStore(root, CheckpointConfig(keep_last=2), recover=True)
+    s2, flat2 = st2.restore()
+    assert s2 == 30
+    np.testing.assert_array_equal(flat2["w"], tree["w"])
+
+
+def test_restore_missing_returns_none(tmp_path):
+    st = CheckpointStore(str(tmp_path / "empty"))
+    step, tree = st.restore()
+    assert step is None and tree is None
+
+
+def test_large_tensor_chunking(tmp_path):
+    st = CheckpointStore(str(tmp_path / "big"))
+    big = np.arange(600000, dtype=np.float64)       # ~4.6 MB → >1 chunk
+    st.save(1, {"big": big})
+    _, got = st.restore()
+    np.testing.assert_array_equal(got["big"], big)

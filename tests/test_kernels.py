@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    x = RNG.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("b,s,h,hkv,d", [
+    (2, 256, 4, 2, 64), (1, 128, 8, 8, 128), (2, 512, 4, 1, 32),
+    (1, 256, 6, 3, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, s, h, hkv, d, dtype, causal):
+    q = _rand((b, s, h, d), dtype)
+    k = _rand((b, s, hkv, d), dtype)
+    v = _rand((b, s, hkv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("b,h,hkv,d,ptotal,page,npages", [
+    (2, 4, 2, 64, 16, 8, 4), (3, 8, 8, 128, 32, 16, 6),
+    (1, 4, 1, 32, 8, 8, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention(b, h, hkv, d, ptotal, page, npages, dtype):
+    q = _rand((b, h, d), dtype)
+    kp = _rand((ptotal, page, hkv, d), dtype)
+    vp = _rand((ptotal, page, hkv, d), dtype)
+    pt = np.full((b, npages), -1, np.int32)
+    lengths = np.zeros((b,), np.int32)
+    for i in range(b):
+        used = int(RNG.integers(1, npages + 1))
+        pt[i, :used] = RNG.choice(ptotal, size=used, replace=False)
+        lengths[i] = int(RNG.integers((used - 1) * page + 1,
+                                      used * page + 1))
+    pt_j, ln_j = jnp.asarray(pt), jnp.asarray(lengths)
+    out = paged_attention(q, kp, vp, pt_j, ln_j, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, pt_j, ln_j)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 3, 8, 16, 16), (1, 128, 2, 16, 32, 32), (2, 32, 4, 4, 8, 8),
+])
+def test_ssd_scan(b, s, h, p, n, chunk):
+    x = _rand((b, s, h, p), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.1, 0.9, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 1.5, size=(h,)), jnp.float32)
+    bm = _rand((b, s, n), jnp.float32)
+    cm = _rand((b, s, n), jnp.float32)
+    y, st = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    yr, sr = ref.ssd_scan_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), atol=5e-5)
+
+
+@pytest.mark.parametrize("ptotal,page,d,blockp", [
+    (32, 8, 16, 4), (64, 4, 8, 8), (16, 8, 32, 4), (48, 8, 16, 1),
+])
+def test_gc_compact(ptotal, page, d, blockp):
+    pool = _rand((ptotal, page, d), jnp.float32)
+    valid = RNG.random(ptotal) < 0.6
+    packed, newidx, dmas = ops.compact_pages(
+        pool, valid, block_pages=blockp, use_pallas=True, interpret=True)
+    newidx = np.asarray(newidx)
+    nlive = int(valid.sum())
+    assert dmas <= nlive or nlive == 0
+    for i in range(ptotal):
+        if valid[i]:
+            dst = int(newidx[i])
+            assert 0 <= dst < nlive
+            np.testing.assert_array_equal(np.asarray(packed[dst]),
+                                          np.asarray(pool[i]))
+        else:
+            assert newidx[i] == -1
+    # destinations are a permutation of [0, nlive)
+    dsts = sorted(int(newidx[i]) for i in range(ptotal) if valid[i])
+    assert dsts == list(range(nlive))
+
+
+def test_compact_plan_coalesces_runs():
+    from repro.kernels.ops import compact_plan
+    valid = np.array([1, 1, 1, 1, 0, 1, 1, 0, 0, 1, 1, 1, 1, 1, 1, 0],
+                     bool)
+    blocks, tail, runs = compact_plan(valid, 4)
+    assert len(runs) == 3
+    n_dmas = len(blocks) + len(tail)
+    assert n_dmas < int(valid.sum())      # strictly fewer than per-page
+
+
+def test_int8_allreduce_close_to_fp32():
+    import jax
+    from repro.parallel.collectives import int8_allreduce
+    xs = jnp.asarray(RNG.normal(size=(4, 128)), jnp.float32)
+
+    def f(x):
+        return int8_allreduce(x, "i")
+
+    out = jax.vmap(f, axis_name="i")(xs)
+    want = jnp.mean(xs, axis=0)
+    err = float(jnp.abs(out[0] - want).max())
+    scale = float(jnp.abs(xs).max()) / 127.0
+    assert err <= 4 * scale      # quantization-bounded

@@ -1,0 +1,100 @@
+"""Hypothesis property tests: the engine is equivalent to a dict under
+arbitrary op sequences, for every KV-separation design."""
+
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import KVStore, preset
+
+KEYS = st.integers(min_value=0, max_value=60)
+SIZES = st.sampled_from([16, 100, 600, 2048, 9000])
+
+
+def ops_strategy():
+    return st.lists(
+        st.one_of(
+            st.tuples(st.just("put"), KEYS, SIZES,
+                      st.integers(min_value=0, max_value=255)),
+            st.tuples(st.just("del"), KEYS),
+            st.tuples(st.just("get"), KEYS),
+        ), min_size=1, max_size=120)
+
+
+def _run(system, ops):
+    db = KVStore(preset(system, memtable_bytes=2048, ksst_bytes=2048,
+                        vsst_bytes=8192, level_base_bytes=2048,
+                        cache_bytes=16384, n_threads=4))
+    oracle = {}
+    for op in ops:
+        if op[0] == "put":
+            _, ki, size, fill = op
+            k = b"k%04d" % ki
+            v = bytes([fill]) * size
+            db.put(k, v)
+            oracle[k] = v
+        elif op[0] == "del":
+            k = b"k%04d" % op[1]
+            db.delete(k)
+            oracle.pop(k, None)
+        else:
+            k = b"k%04d" % op[1]
+            assert db.get(k) == oracle.get(k), (system, k)
+    db.flush_all()
+    for k, v in oracle.items():
+        assert db.get(k) == v, (system, "post-drain", k)
+    for ki in range(61):
+        k = b"k%04d" % ki
+        if k not in oracle:
+            assert db.get(k) is None, (system, "ghost", k)
+    # accounting invariants
+    tot, live = db.versions.value_stats()
+    assert 0 <= live <= tot
+    # scan equals oracle
+    want = sorted(oracle.items())
+    got = db.scan(b"", len(oracle) + 10)
+    assert got == want, system
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy())
+def test_scavenger_plus_matches_dict(ops):
+    _run("scavenger_plus", ops)
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy())
+def test_terarkdb_matches_dict(ops):
+    _run("terarkdb", ops)
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy())
+def test_titan_matches_dict(ops):
+    _run("titan", ops)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy())
+def test_blobdb_matches_dict(ops):
+    _run("blobdb", ops)
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(valid=st.lists(st.booleans(), min_size=1, max_size=64),
+       block=st.sampled_from([1, 2, 4, 8]))
+def test_compact_plan_covers_every_live_page(valid, block):
+    import numpy as np
+    from repro.kernels.ops import compact_plan
+    v = np.asarray(valid, bool)
+    blocks, tail, runs = compact_plan(v, block)
+    covered = set(tail.tolist())
+    for b in blocks:
+        covered.update(range(b * block, (b + 1) * block))
+    live = {i for i in range(len(v)) if v[i]}
+    assert covered == live
+    assert len(blocks) + len(tail) <= max(1, len(live))

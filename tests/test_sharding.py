@@ -1,0 +1,82 @@
+"""Sharding rules + dry-run integration.
+
+The production-mesh dry-run needs 512 fake devices, which must not leak
+into other tests — it runs in a subprocess with its own XLA_FLAGS.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import default_rules, spec_for
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+    class devices:
+        size = 256
+
+
+def test_spec_divisibility_fallback():
+    mesh = _FakeMesh()
+    rules = {"heads": "model", "kv_heads": "model", "embed": "data",
+             "batch": ("data",)}
+    # 48 heads % 16 == 0 → sharded; 8 kv heads % 16 != 0 → replicated
+    s = spec_for((6144, 48, 128), ("embed", "heads", None), rules, mesh)
+    assert s == P("data", "model")
+    s = spec_for((6144, 8, 128), ("embed", "kv_heads", None), rules, mesh)
+    assert s == P("data")
+    # a mesh axis is used at most once per tensor
+    s = spec_for((48, 48), ("heads", "heads"), rules, mesh)
+    assert s == P("model")
+
+
+def test_batch_spans_pod_and_data():
+    class M(_FakeMesh):
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+    rules = {"batch": ("pod", "data")}
+    s = spec_for((256, 4096), ("batch", None), rules, M())
+    assert s == P(("pod", "data"))
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess():
+    """Full production-mesh dry-run of the cheapest cell (compile proof)."""
+    code = (
+        "from repro.launch.dryrun import run_cell;"
+        "import json;"
+        "r = run_cell('olmo-1b', 'decode_32k', False, '');"
+        "print(json.dumps({'dom': r['roofline']['dominant'],"
+        "                  'dev': r['devices']}))"
+    )
+    env = dict(os.environ,
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    assert payload["dev"] == 256
+    assert payload["dom"] in ("compute_s", "memory_s", "collective_s")
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ar = f32[128,256] all-reduce(f32[128,256] %x), replica_groups={}
+  %ag = bf16[64]{0} all-gather(bf16[32]{0} %y), dimensions={0}
+  %other = f32[8] add(f32[8] %a, f32[8] %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["all-gather"] == 64 * 2
+    assert "add" not in out

@@ -1,0 +1,119 @@
+"""Table-format unit tests: BTable/DTable/RTable/LogTable round-trips,
+bloom behaviour, DTable index-probe isolation, RTable lazy-read spans."""
+
+import pytest
+
+from repro.store.blocks import BlockCache, BloomFilter
+from repro.store.device import BlockDevice, IOClass
+from repro.store.format import VT_INDEX_KF, VT_VALUE, encode_kf
+from repro.store.tables import (KTableReader, KTableWriter, LogTableReader,
+                                LogTableWriter, RTableReader, RTableWriter,
+                                VBTableReader, VBTableWriter)
+
+
+def _entries(n=50, big_every=3):
+    out = []
+    for i in range(n):
+        k = b"key%06d" % i
+        if i % big_every == 0:
+            out.append((k, 100 + i, VT_INDEX_KF, encode_kf(7, 4096)))
+        else:
+            out.append((k, 100 + i, VT_VALUE, b"v" * 64))
+    return out
+
+
+@pytest.mark.parametrize("dtable", [False, True])
+def test_ktable_roundtrip(dtable):
+    dev = BlockDevice()
+    w = KTableWriter(dev, block_bytes=256, dtable=dtable)
+    entries = _entries()
+    for e in entries:
+        w.add(e)
+    fid, props = w.finish()
+    assert props["num_entries"] == len(entries)
+    r = KTableReader(dev, fid, BlockCache(1 << 20))
+    for ukey, seq, vt, pl in entries:
+        got = r.get(ukey)
+        assert got == (ukey, seq, vt, pl)
+    assert r.get(b"missing") is None
+    assert list(r.iter_entries()) == sorted(
+        entries, key=lambda e: (e[0], -e[1]))
+    # iter_from seeks correctly
+    mid = entries[20][0]
+    got = list(r.iter_from(mid))
+    assert got[0][0] == mid
+
+
+def test_dtable_index_probe_avoids_data_blocks():
+    dev = BlockDevice()
+    w = KTableWriter(dev, block_bytes=256, dtable=True)
+    for e in _entries(60):
+        w.add(e)
+    fid, _ = w.finish()
+    cache = BlockCache(1 << 20)
+    r = KTableReader(dev, fid, cache, IOClass.GC_LOOKUP)
+    before = dev.stats.by_class[IOClass.GC_LOOKUP].ops
+    e = r.get_index_entry(b"key000000", IOClass.GC_LOOKUP)
+    assert e is not None and e[2] == VT_INDEX_KF
+    # a small-KV key: the index probe must return None without touching
+    # data blocks (bloom says no)
+    assert r.get_index_entry(b"key000001", IOClass.GC_LOOKUP) is None
+    assert dev.stats.by_class[IOClass.USER_READ].ops == \
+        pytest.approx(dev.stats.by_class[IOClass.USER_READ].ops)
+
+
+def test_rtable_lazy_read_and_spans():
+    dev = BlockDevice()
+    w = RTableWriter(dev, index_partition=8)
+    recs = [(b"r%05d" % i, bytes([i % 251]) * (500 + i)) for i in range(40)]
+    addr = [w.add(k, v) for k, v in recs]
+    fid, props = w.finish()
+    r = RTableReader(dev, fid, BlockCache(1 << 20))
+    keys = r.read_keys()
+    assert [k for k, _, _ in keys] == [k for k, _ in recs]
+    # lazy single-record read
+    k, v = r.read_record(addr[7][0], addr[7][1])
+    assert (k, v) == recs[7]
+    # coalesced span covering records 3..6 (contiguous by construction)
+    span_off = addr[3][0]
+    span_len = addr[6][0] + addr[6][1] - span_off
+    got = r.read_span(span_off, span_len)
+    assert got == recs[3:7]
+    # point get
+    assert r.get(b"r00011") == recs[11][1]
+    assert r.get(b"nope") is None
+
+
+def test_vbtable_and_logtable():
+    dev = BlockDevice()
+    w = VBTableWriter(dev, block_bytes=512)
+    recs = [(b"b%04d" % i, b"z" * 300) for i in range(30)]
+    for k, v in recs:
+        w.add(k, v)
+    fid, _ = w.finish()
+    r = VBTableReader(dev, fid, BlockCache(1 << 20))
+    assert r.get(b"b0005") == recs[5][1]
+    assert r.scan_all() == recs
+
+    lw = LogTableWriter(dev)
+    offs = [lw.add(k, v) for k, v in recs]
+    lfid, _ = lw.finish()
+    lr = LogTableReader(dev, lfid)
+    assert lr.read_record(*offs[9]) == recs[9]
+    assert [(k, v) for k, v, _, _ in lr.scan_all()] == recs
+
+
+def test_bloom_false_negative_free():
+    keys = [b"k%06d" % i for i in range(500)]
+    bf = BloomFilter.build(keys, bits_per_key=10)
+    assert all(bf.may_contain(k) for k in keys)
+    fp = sum(bf.may_contain(b"x%06d" % i) for i in range(2000)) / 2000
+    assert fp < 0.05
+
+
+def test_block_cache_priority_protects_index_blocks():
+    c = BlockCache(1000, high_ratio=0.5)
+    c.put((1, 0), b"i" * 400, high_priority=True)
+    for i in range(20):
+        c.put((2, i), b"d" * 300)      # low-pri churn
+    assert c.get((1, 0)) is not None   # survived
