@@ -1,0 +1,61 @@
+"""Sharded front-end sweep: shard count vs throughput and space amp.
+
+M logical clients (tenants) drive a multi-tenant YCSB-A mix through the
+shard router with batched ops (write_batch / multi_get); the shards share
+one device and one background lane pool, so the dynamic GC scheduler
+arbitrates lanes globally across shards.
+
+Rows: sharded/<system>/s<N>,us_per_op,kops=..,amp=..,stall=..,gc=..
+
+Env (see common.py): REPRO_BENCH_MB, REPRO_BENCH_SYSTEMS, REPRO_BENCH_FAST
+  REPRO_BENCH_SHARDS   comma list of shard counts (default 1,2,4,8)
+  REPRO_BENCH_CLIENTS  logical clients (default 4)
+"""
+
+from __future__ import annotations
+
+import os
+
+from .common import SHORT, fast, dataset_mb, systems
+from repro.bench import (WorkloadSpec, gen_multi_client, make_db, run_phase,
+                         space_amplification)
+
+BATCH = 32
+
+
+def shard_counts() -> list:
+    env = os.environ.get("REPRO_BENCH_SHARDS")
+    return [int(x) for x in env.split(",")] if env else [1, 2, 4, 8]
+
+
+def run() -> list:
+    n_clients = int(os.environ.get("REPRO_BENCH_CLIENTS", "4"))
+    ds = dataset_mb() << 20
+    if fast():
+        ds = min(ds, 2 << 20)
+    # dataset/update sizes are per client (gen_multi_client semantics)
+    spec = WorkloadSpec(value_kind="mixed-8k",
+                        dataset_bytes=ds // n_clients,
+                        update_bytes=3 * ds // n_clients)
+    n_ops = 500 if fast() else max(1000, int(1.5 * spec.n_keys))
+    rows = []
+    for system in systems():
+        for n in shard_counts():
+            db = make_db(system, spec, n_shards=n)
+            run_phase(db, "load",
+                      gen_multi_client(spec, n_clients, "load"),
+                      drain=True, batch=BATCH)
+            r = run_phase(db, "ycsb-a",
+                          gen_multi_client(spec, n_clients, "ycsb-a",
+                                           n_ops=n_ops),
+                          drain=True, batch=BATCH)
+            s = db.stats()
+            us = 1e6 * r.sim_seconds / max(1, r.ops)
+            rows.append(
+                f"sharded/{SHORT[system]}/s{n},{us:.2f},"
+                f"kops={r.kops_per_s:.2f} "
+                f"amp={space_amplification(db):.3f} "
+                f"stall={s['counters']['stall_time_s']:.3f} "
+                f"gc={s['counters']['gc_runs']:.0f} "
+                f"flushes={s['counters']['flushes']:.0f}")
+    return rows

@@ -13,6 +13,7 @@ Suites:
   micro          Fig. 13       (1.5x-capped load/update/read/scan + I/O)
   ycsb           Fig. 17/18    (YCSB A-F)
   features       Fig. 19/20    (ablation ladder)
+  sharded        sharded front-end: shard count vs throughput/space amp
   kernels        Pallas kernel micro-costs (interpret mode)
   roofline       dry-run roofline terms (reads dryrun JSON artifacts)
 """
@@ -26,7 +27,8 @@ import time
 def main() -> None:
     which = set(a for a in sys.argv[1:] if not a.startswith("-"))
     from . import (bench_features, bench_gc_breakdown, bench_micro,
-                   bench_space_sources, bench_space_time, bench_ycsb)
+                   bench_sharded, bench_space_sources, bench_space_time,
+                   bench_ycsb)
     suites = {
         "space_time": bench_space_time.run,
         "gc_breakdown": bench_gc_breakdown.run,
@@ -34,6 +36,7 @@ def main() -> None:
         "micro": bench_micro.run,
         "ycsb": bench_ycsb.run,
         "features": bench_features.run,
+        "sharded": bench_sharded.run,
     }
     try:
         from . import bench_kernels

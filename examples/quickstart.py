@@ -30,3 +30,18 @@ db.delete(b"tiny")
 assert db.get(b"hello") == b"world" * 300
 assert db.get(b"tiny") is None
 print("scan:", [(k, len(v)) for k, v in db.scan(b"", 10)])
+
+# Sharded multi-tenant front-end: N shards, one device, one lane pool.
+# Batched ops route per shard; GC/compaction admission is global.
+from repro.core import ShardedKVStore  # noqa: E402
+
+sdb = ShardedKVStore(preset("scavenger_plus"), n_shards=4)
+sdb.write_batch([("put", b"k%04d" % i, b"v" * 1024) for i in range(64)]
+                + [("del", b"k0000")])
+vals = sdb.multi_get([b"k0001", b"k0000", b"k0042"])
+assert vals[0] == b"v" * 1024 and vals[1] is None
+sdb.flush_all()
+print("sharded scan:", [k for k, _ in sdb.scan(b"k", 5)])
+print("sharded space:", {k: v for k, v in sdb.space_usage().items()
+                         if k in ("total_bytes", "index_bytes",
+                                  "value_live_bytes")})

@@ -11,6 +11,7 @@ from typing import Dict, Iterable, Optional
 
 from ..core.db import KVStore
 from ..core.options import Options, preset
+from ..core.sharded import ShardedKVStore
 from ..store.format import VT_DELETE, VT_VALUE
 from .workloads import KEY_BYTES, Op, ScaleConfig, WorkloadSpec
 
@@ -70,22 +71,34 @@ class PhaseResult:
 
 
 def make_db(system: str, spec: WorkloadSpec,
-            space_limit_x: Optional[float] = None, **over) -> (
-        KVStore):
+            space_limit_x: Optional[float] = None, n_shards: int = 0,
+            **over):
+    """Build a KVStore (default) or, with ``n_shards >= 1``, a
+    ShardedKVStore for the given system preset, workload-scaled.  The
+    space cap is enforced on the shared device, so it stays a *global*
+    budget regardless of shard count."""
     opts = preset(system, **over)
     ScaleConfig(spec.dataset_bytes).apply(opts)
     if space_limit_x is not None:
         opts.space_cap_bytes = int(space_limit_x * spec.dataset_bytes)
-    db = KVStore(opts)
+    db = (ShardedKVStore(opts, n_shards=n_shards) if n_shards
+          else KVStore(opts))
     oracle = Oracle(opts.sep_threshold)
     db.on_user_write = oracle.on_write
     db.oracle = oracle  # type: ignore[attr-defined]
     return db
 
 
-def run_phase(db: KVStore, name: str, ops: Iterable[Op],
+def run_phase(db, name: str, ops: Iterable[Op],
               drain: bool = False,
-              capture_latency: bool = False) -> PhaseResult:
+              capture_latency: bool = False,
+              batch: int = 0) -> PhaseResult:
+    """Drive an op stream.  With ``batch > 1``, consecutive writes
+    coalesce into ``write_batch`` and consecutive gets into ``multi_get``
+    (batch latency attributed evenly across its ops); stores without the
+    batched API fall back to per-op submission."""
+    if batch > 1 and not hasattr(db, "write_batch"):
+        batch = 0
     st = db.device.stats
     r0 = st.read_bytes()
     w0 = st.write_bytes()
@@ -93,8 +106,52 @@ def run_phase(db: KVStore, name: str, ops: Iterable[Op],
     wall0 = time.perf_counter()
     n = 0
     lats = [] if capture_latency else None
+
+    wbuf: list = []         # pending ('put'|'del', ...) ops
+    gbuf: list = []         # pending get keys
+
+    def _flush_writes() -> None:
+        if not wbuf:
+            return
+        b_t0 = db.clock.now
+        db.write_batch(wbuf)
+        if lats is not None:
+            per = (db.clock.now - b_t0) / len(wbuf)
+            lats.extend([per] * len(wbuf))
+        wbuf.clear()
+
+    def _flush_gets() -> None:
+        if not gbuf:
+            return
+        b_t0 = db.clock.now
+        db.multi_get(gbuf)
+        if lats is not None:
+            per = (db.clock.now - b_t0) / len(gbuf)
+            lats.extend([per] * len(gbuf))
+        gbuf.clear()
+
     for op in ops:
         kind = op[0]
+        if batch > 1:
+            if kind in ("put", "del"):
+                _flush_gets()
+                wbuf.append(op)
+                if len(wbuf) >= batch:
+                    _flush_writes()
+            elif kind == "get":
+                _flush_writes()
+                gbuf.append(op[1])
+                if len(gbuf) >= batch:
+                    _flush_gets()
+            else:
+                _flush_writes()
+                _flush_gets()
+                s_t0 = db.clock.now
+                db.scan(op[1], op[2])
+                if lats is not None:
+                    lats.append(db.clock.now - s_t0)
+            n += 1
+            continue
         if lats is not None:
             op_t0 = db.clock.now
         if kind == "put":
@@ -108,6 +165,9 @@ def run_phase(db: KVStore, name: str, ops: Iterable[Op],
         if lats is not None:
             lats.append(db.clock.now - op_t0)
         n += 1
+    if batch > 1:
+        _flush_writes()
+        _flush_gets()
     if drain:
         db.drain()
     sim = db.clock.now - t0
@@ -124,7 +184,7 @@ def run_phase(db: KVStore, name: str, ops: Iterable[Op],
     return res
 
 
-def space_amplification(db: KVStore) -> float:
+def space_amplification(db) -> float:
     oracle = getattr(db, "oracle", None)
     logical = oracle.logical_bytes if oracle else 1
     return db.device.total_bytes() / max(1, logical)

@@ -14,7 +14,7 @@ dataset : 64 MB memtable : 64 MB kSST : 256 MB vSST : 1 GB cache), so a
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -221,3 +221,65 @@ def gen_ycsb(spec: WorkloadSpec, which: str, n_ops: int) -> Iterator[Op]:
             k = make_key(kc.next())
             yield ("get", k)
             yield ("put", k, vm.value(vm.next_size()))
+
+
+# ---------------------------------------------------------------------------
+# Multi-client / multi-tenant workloads (sharded front-end)
+# ---------------------------------------------------------------------------
+
+def tenant_key(tenant: int, key: bytes) -> bytes:
+    """Prefix a key with its tenant id — each logical client owns a
+    disjoint keyspace, the multi-tenant setting of the sharded store."""
+    return b"t%03d/" % tenant + key
+
+
+def _prefix_ops(stream: Iterator[Op], tenant: int) -> Iterator[Op]:
+    for op in stream:
+        if op[0] == "put":
+            yield ("put", tenant_key(tenant, op[1]), op[2])
+        elif op[0] == "scan":
+            yield ("scan", tenant_key(tenant, op[1]), op[2])
+        else:                                   # get / del
+            yield (op[0], tenant_key(tenant, op[1]))
+
+
+def interleave_round_robin(streams: Sequence[Iterator[Op]]) -> Iterator[Op]:
+    """One op from each live client per round, until all are exhausted —
+    the arrival pattern of M concurrent clients over one front-end."""
+    active: List[Iterator[Op]] = list(streams)
+    while active:
+        survivors: List[Iterator[Op]] = []
+        for s in active:
+            try:
+                yield next(s)
+            except StopIteration:
+                continue
+            survivors.append(s)
+        active = survivors
+
+
+def gen_multi_client(spec: WorkloadSpec, n_clients: int,
+                     phase: str = "ycsb-a", n_ops: int = 0,
+                     tenant_prefix: bool = True) -> Iterator[Op]:
+    """M logical clients interleaved round-robin over one op stream.
+
+    ``phase`` is ``'load'``, ``'update'`` or ``'ycsb-<a..f>'``; each
+    client runs its own generator instance (distinct seed, optional
+    tenant-prefixed keyspace).  The stream depends only on (spec,
+    n_clients), never on shard count, so the same op sequence can drive a
+    plain KVStore and any ShardedKVStore for equivalence testing.
+    ``spec.dataset_bytes``/``n_ops`` are interpreted per client.
+    """
+    streams: List[Iterator[Op]] = []
+    for c in range(n_clients):
+        cspec = dataclasses.replace(spec, seed=spec.seed + 101 * c)
+        if phase == "load":
+            s = gen_load(cspec)
+        elif phase == "update":
+            s = gen_update(cspec)
+        elif phase.startswith("ycsb-"):
+            s = gen_ycsb(cspec, phase[len("ycsb-"):], n_ops)
+        else:
+            raise ValueError(phase)
+        streams.append(_prefix_ops(s, c) if tenant_prefix else s)
+    return interleave_round_robin(streams)

@@ -12,5 +12,6 @@ Public API::
 
 from .db import KVStore
 from .options import Options, preset
+from .sharded import ShardedKVStore
 
-__all__ = ["KVStore", "Options", "preset"]
+__all__ = ["KVStore", "Options", "preset", "ShardedKVStore"]

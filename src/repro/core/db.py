@@ -28,7 +28,8 @@ from .compaction import execute_compaction, plan_compaction
 from .dropcache import DropCache
 from .gc import pick_gc_candidate, run_gc_terark, run_gc_titan
 from .options import Options
-from .scheduler import JOB_COMPACTION, JOB_FLUSH, JOB_GC, Scheduler
+from .scheduler import (JOB_COMPACTION, JOB_FLUSH, JOB_GC, Scheduler,
+                        SchedulerCore)
 from .version import FileMeta, VersionSet, VSSTMeta
 
 GC_STEP_CLASSES = (IOClass.GC_READ, IOClass.GC_LOOKUP, IOClass.GC_WRITE,
@@ -37,21 +38,29 @@ GC_STEP_CLASSES = (IOClass.GC_READ, IOClass.GC_LOOKUP, IOClass.GC_WRITE,
 
 class KVStore:
     def __init__(self, opts: Options, device: Optional[BlockDevice] = None,
-                 recover: bool = False) -> None:
+                 recover: bool = False,
+                 sched_core: Optional[SchedulerCore] = None,
+                 manifest_fid: int = 1) -> None:
         self.opts = opts.validate()
         self.device = device or BlockDevice(Clock(), CostModel())
         self.clock = self.device.clock
         self.cache = BlockCache(opts.cache_bytes)
         if recover:
-            # Crash restart: fid 1 is always the manifest (first file
-            # created); replay it, then the last WAL (torn tail tolerated).
+            # Crash restart: the manifest of a standalone store is always
+            # fid 1 (first file created); a shard inside a ShardedKVStore
+            # is handed its manifest fid from the superblock.  Replay it,
+            # then the last WAL (torn tail tolerated).
             self.device.charge_time = False
             self.versions = VersionSet(self.device, opts.num_levels,
-                                       manifest_fid=1)
+                                       manifest_fid=manifest_fid)
             self.versions.recover()
         else:
             self.versions = VersionSet(self.device, opts.num_levels)
-        self.sched = Scheduler(self.clock, self.device, opts)
+        self.sched = Scheduler(self.clock, self.device, opts,
+                               core=sched_core)
+        # Re-offer admission on every job completion: a freed lane may be
+        # the one this store's pending background work is waiting for.
+        self.sched.core.add_waiter(self.maybe_schedule_background)
         self.dropcache = DropCache(opts.dropcache_entries)
         self.mem = Memtable()
         if recover:
@@ -562,11 +571,7 @@ class KVStore:
 
     def drain(self, max_sim_s: float = 1e9) -> None:
         """Let all in-flight background work complete (quiesce)."""
-        guard = 0
-        while self.sched.wait_for_event():
-            guard += 1
-            if guard > 1_000_000 or self.clock.now > max_sim_s:
-                break
+        self.sched.core.drain(max_sim_s)
 
     def flush_all(self) -> None:
         """Force-rotate the active memtable and flush everything."""

@@ -8,13 +8,27 @@ job's **effects** (version edits, file deletions) apply when the clock
 reaches the job's completion time on its assigned lane.  This models lane
 (thread) contention, stalls and scheduling policy without OS threads —
 deterministic and unit-testable.
+
+Ownership is split in two so that several store instances (the shards of a
+``ShardedKVStore``) can compete for one background-thread pool the way
+RocksDB column families share ``Env`` threads:
+
+* :class:`SchedulerCore` — the shared substrate: lane pools, the event
+  heap, per-kind active counts, the GC rate limiters and the bandwidth
+  governor.  Admission and the dynamic GC allocation (eqs. 4-6, over the
+  *summed* member pressures) are arbitrated here, globally.
+* :class:`Scheduler` — a per-store view over a core.  Constructed without
+  an explicit core it creates a private one, preserving the single-store
+  admission/allocation policy (one behavioural addition over the original:
+  every job completion re-offers admission to all registered members, so
+  pending background work is picked up as soon as a lane frees).
 """
 
 from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from ..store.device import BlockDevice, Clock, RateLimiter
 
@@ -66,8 +80,15 @@ class Lanes:
         return end
 
 
-class Scheduler:
-    """Owns the event heap and the compaction/GC admission policy."""
+class SchedulerCore:
+    """Shared lane pool, event heap, limiters and governor state.
+
+    One core serves either a single store (the default) or every shard of
+    a sharded store, in which case lane occupancy, job admission, dynamic
+    GC thread allocation and GC bandwidth throttling are global across
+    shards — the setting where the paper's scheduler (III-D) arbitrates
+    between competing column families on one device.
+    """
 
     def __init__(self, clock: Clock, device: BlockDevice, opts) -> None:
         self.clock = clock
@@ -75,8 +96,8 @@ class Scheduler:
         self.opts = opts
         self.flush_lanes = Lanes(opts.flush_lanes)
         self.bg_lanes = Lanes(opts.n_threads)
-        self._events: List[Tuple[float, int, Callable[[], None]]] = []
-        self._counter = itertools.count()
+        self.events: List[Tuple[float, int, Callable[[], None]]] = []
+        self.counter = itertools.count()
         self.active = {JOB_FLUSH: 0, JOB_COMPACTION: 0, JOB_GC: 0}
         self.max_gc = max(1, opts.n_threads // 2)   # TerarkDB static default
         # bandwidth governor state (paper III-D.2)
@@ -84,6 +105,11 @@ class Scheduler:
         self.gc_read_limiter = RateLimiter(clock, device.cost.read_bw)
         device.gc_write_limiter = self.gc_write_limiter
         device.gc_read_limiter = self.gc_read_limiter
+        self._pressures: Dict[int, Tuple[float, float]] = {}
+        # Members re-offered admission whenever a job completes: with a
+        # shared pool the lane a completion frees may be the one a
+        # *different* shard's pending flush/compaction/GC is waiting for.
+        self.waiters: List[Callable[[], None]] = []
         self._flush_bw_avg: Optional[float] = None
         self._win_start = 0.0
         self._win_flush_bytes = 0
@@ -91,36 +117,28 @@ class Scheduler:
         self._win_flush_time = 0.0
         self.throttle_events = 0
 
-    # ------------------------------------------------------------------
-    def run_job(self, kind: str, body: Callable[[], Callable[[], None]],
-                ) -> float:
-        """Execute ``body`` now (real work, time into a JobClock), schedule
-        its returned effects at lane completion time.  Returns end time."""
-        self.active[kind] += 1
-        with JobClock(self.device) as jc:
-            effects = body()
-        lanes = self.flush_lanes if kind == JOB_FLUSH else self.bg_lanes
-        end = lanes.schedule(self.clock.now, jc.elapsed)
-        elapsed = jc.elapsed
+    # -- event pump ------------------------------------------------------
+    def push_event(self, when: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self.events, (when, next(self.counter), fn))
 
-        def _complete() -> None:
-            self.active[kind] -= 1
-            effects(elapsed)
+    def add_waiter(self, fn: Callable[[], None]) -> None:
+        self.waiters.append(fn)
 
-        heapq.heappush(self._events, (end, next(self._counter), _complete))
-        return end
+    def notify_waiters(self) -> None:
+        for fn in list(self.waiters):
+            fn()
 
     def pump(self) -> bool:
         """Apply all effects due at or before the current clock."""
         ran = False
-        while self._events and self._events[0][0] <= self.clock.now:
-            _, _, fn = heapq.heappop(self._events)
+        while self.events and self.events[0][0] <= self.clock.now:
+            _, _, fn = heapq.heappop(self.events)
             fn()
             ran = True
         return ran
 
     def next_event_time(self) -> Optional[float]:
-        return self._events[0][0] if self._events else None
+        return self.events[0][0] if self.events else None
 
     def wait_for_event(self) -> bool:
         """Advance the clock to the next completion (used during stalls)."""
@@ -131,9 +149,16 @@ class Scheduler:
         self.pump()
         return True
 
+    def drain(self, max_sim_s: float = 1e9) -> None:
+        """Let all in-flight background work complete (quiesce)."""
+        guard = 0
+        while self.wait_for_event():
+            guard += 1
+            if guard > 1_000_000 or self.clock.now > max_sim_s:
+                break
+
     # -- admission -------------------------------------------------------
     def can_admit(self, kind: str) -> bool:
-        now = self.clock.now
         if kind == JOB_FLUSH:
             return self.active[JOB_FLUSH] < self.opts.flush_lanes
         total = self.active[JOB_COMPACTION] + self.active[JOB_GC]
@@ -146,12 +171,17 @@ class Scheduler:
             self.active[JOB_COMPACTION] < max(1, self.opts.n_threads - self.max_gc)
 
     # -- dynamic thread allocation (paper eq. 4-6) -------------------------
-    def update_allocation(self, p_index: float, p_value: float) -> None:
+    def update_allocation(self, member: int, p_index: float,
+                          p_value: float) -> None:
+        """Record one member's pressures and recompute the global GC cap
+        from the sum over members — a shard's value-store pressure claims
+        lanes from the whole pool, not just its own slice."""
         if not self.opts.dynamic_scheduler:
             return
+        self._pressures[member] = (p_index, p_value)
         eps = 1e-6
-        p_i = max(p_index, 0.0) + eps
-        p_v = max(p_value, 0.0) + eps
+        p_i = sum(max(p, 0.0) for p, _ in self._pressures.values()) + eps
+        p_v = sum(max(p, 0.0) for _, p in self._pressures.values()) + eps
         n = self.opts.n_threads
         self.max_gc = int(round(n * p_v / (p_i + p_v)))
         self.max_gc = max(1, min(n - 1, self.max_gc))
@@ -196,3 +226,91 @@ class Scheduler:
         self._win_flush_bytes = 0
         self._win_write_bytes = 0
         self._win_flush_time = 0.0
+
+
+class Scheduler:
+    """Per-store view over a (possibly shared) :class:`SchedulerCore`."""
+
+    _member_ids = itertools.count()
+
+    def __init__(self, clock: Clock, device: BlockDevice, opts,
+                 core: Optional[SchedulerCore] = None) -> None:
+        self.clock = clock
+        self.device = device
+        self.opts = opts
+        self.core = core or SchedulerCore(clock, device, opts)
+        self._member = next(Scheduler._member_ids)
+
+    # ------------------------------------------------------------------
+    def run_job(self, kind: str, body: Callable[[], Callable[[], None]],
+                ) -> float:
+        """Execute ``body`` now (real work, time into a JobClock), schedule
+        its returned effects at lane completion time.  Returns end time."""
+        core = self.core
+        core.active[kind] += 1
+        with JobClock(self.device) as jc:
+            effects = body()
+        lanes = core.flush_lanes if kind == JOB_FLUSH else core.bg_lanes
+        end = lanes.schedule(self.clock.now, jc.elapsed)
+        elapsed = jc.elapsed
+
+        def _complete() -> None:
+            core.active[kind] -= 1
+            effects(elapsed)
+            core.notify_waiters()
+
+        core.push_event(end, _complete)
+        return end
+
+    def pump(self) -> bool:
+        return self.core.pump()
+
+    def next_event_time(self) -> Optional[float]:
+        return self.core.next_event_time()
+
+    def wait_for_event(self) -> bool:
+        return self.core.wait_for_event()
+
+    def can_admit(self, kind: str) -> bool:
+        return self.core.can_admit(kind)
+
+    def update_allocation(self, p_index: float, p_value: float) -> None:
+        self.core.update_allocation(self._member, p_index, p_value)
+
+    def note_flush(self, nbytes: int, duration: float) -> None:
+        self.core.note_flush(nbytes, duration)
+
+    def note_write(self, nbytes: int) -> None:
+        self.core.note_write(nbytes)
+
+    def govern_bandwidth(self) -> None:
+        self.core.govern_bandwidth()
+
+    # -- shared state passthroughs (read by stats/tests) ----------------
+    @property
+    def active(self) -> Dict[str, int]:
+        return self.core.active
+
+    @property
+    def max_gc(self) -> int:
+        return self.core.max_gc
+
+    @property
+    def gc_write_limiter(self) -> RateLimiter:
+        return self.core.gc_write_limiter
+
+    @property
+    def gc_read_limiter(self) -> RateLimiter:
+        return self.core.gc_read_limiter
+
+    @property
+    def throttle_events(self) -> int:
+        return self.core.throttle_events
+
+    @property
+    def flush_lanes(self) -> Lanes:
+        return self.core.flush_lanes
+
+    @property
+    def bg_lanes(self) -> Lanes:
+        return self.core.bg_lanes

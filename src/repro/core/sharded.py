@@ -1,0 +1,266 @@
+"""Sharded multi-tenant front-end: N KVStore shards behind one device.
+
+Real KV-separated deployments (Titan/TerarkDB as evaluated in the paper)
+run many column-family/shard instances over a single SSD and a single
+background-thread pool.  ``ShardedKVStore`` reproduces that topology:
+
+* user keys are hash-partitioned across N :class:`KVStore` shards
+  (deterministic CRC32 routing, stable across processes and restarts);
+* all shards share one :class:`BlockDevice`, one simulated clock and one
+  :class:`SchedulerCore` — flush/compaction/GC admission, the dynamic GC
+  thread allocation (eqs. 4-6 over *summed* shard pressures) and the GC
+  bandwidth governor are arbitrated globally, so a GC-heavy shard competes
+  with its neighbours for lanes exactly as column families compete for
+  RocksDB ``Env`` threads;
+* batched APIs (``write_batch`` / ``multi_get`` / merged ``scan``) route
+  per shard, preserving per-key ordering (a key always hashes to the same
+  shard);
+* a *superblock* — always fid 1, the first file created — records the
+  shard count and each shard's manifest fid so ``recover=True`` can replay
+  every shard's manifest + WALs after a crash.
+
+Per-shard memtables follow RocksDB column-family semantics (each shard
+owns one); the block-cache budget is divided evenly so total memory does
+not scale with shard count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq as _heapq
+import zlib
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import msgpack
+
+from ..store.device import BlockDevice, Clock, CostModel, IOClass
+from .db import KVStore
+from .options import Options
+from .scheduler import SchedulerCore
+
+SUPERBLOCK_FID = 1
+
+WriteOp = Tuple  # ('put', key, value) | ('del', key)
+
+
+def shard_of(ukey: bytes, n_shards: int) -> int:
+    """Deterministic hash routing (CRC32, unsalted — stable across runs)."""
+    return zlib.crc32(ukey) % n_shards
+
+
+class ShardedKVStore:
+    def __init__(self, opts: Options, n_shards: int = 4,
+                 device: Optional[BlockDevice] = None,
+                 recover: bool = False) -> None:
+        self.opts = opts.validate()
+        self.device = device or BlockDevice(Clock(), CostModel())
+        self.clock = self.device.clock
+        self.sched_core = SchedulerCore(self.clock, self.device, opts)
+        self.shards: List[KVStore] = []
+        self._on_user_write: Optional[Callable[[bytes, int, bytes], None]] \
+            = None
+        if recover:
+            sb = self._read_superblock()
+            n_shards = sb["n_shards"]
+            shard_opts = self._shard_opts(n_shards)
+            for mf in sb["manifests"]:
+                self.shards.append(
+                    KVStore(shard_opts, device=self.device, recover=True,
+                            sched_core=self.sched_core, manifest_fid=mf))
+        else:
+            fid = self.device.create()
+            if fid != SUPERBLOCK_FID:
+                raise RuntimeError(
+                    "ShardedKVStore must be created on a fresh device "
+                    f"(first fid is {fid}, expected {SUPERBLOCK_FID})")
+            shard_opts = self._shard_opts(n_shards)
+            for _ in range(n_shards):
+                self.shards.append(
+                    KVStore(shard_opts, device=self.device,
+                            sched_core=self.sched_core))
+            blob = msgpack.packb(
+                {"n_shards": n_shards,
+                 "manifests": [s.versions.manifest_fid for s in self.shards]},
+                use_bin_type=True)
+            self.device.append(SUPERBLOCK_FID,
+                               len(blob).to_bytes(4, "little") + blob,
+                               IOClass.MANIFEST)
+        self.n_shards = n_shards
+
+    def _shard_opts(self, n_shards: int) -> Options:
+        # One cache budget for the whole device, split across shards.
+        # Floor at a single block so the aggregate stays (near) constant
+        # across shard counts — the sweep must not conflate sharding with
+        # a growing cache budget.
+        return dataclasses.replace(
+            self.opts,
+            cache_bytes=max(self.opts.block_bytes,
+                            self.opts.cache_bytes // n_shards))
+
+    def _read_superblock(self) -> dict:
+        if not self.device.exists(SUPERBLOCK_FID):
+            raise RuntimeError("no superblock — device was never "
+                               "initialised by a ShardedKVStore")
+        self.device.charge_time = False
+        buf = self.device.read_all(SUPERBLOCK_FID, IOClass.MANIFEST)
+        self.device.charge_time = True
+        ln = int.from_bytes(buf[:4], "little")
+        return msgpack.unpackb(buf[4:4 + ln], raw=False)
+
+    # ==================================================================
+    # Routing
+    # ==================================================================
+
+    def shard_of(self, ukey: bytes) -> int:
+        return shard_of(ukey, self.n_shards)
+
+    def shard_for(self, ukey: bytes) -> KVStore:
+        return self.shards[shard_of(ukey, self.n_shards)]
+
+    # ==================================================================
+    # Single-op API (same surface as KVStore)
+    # ==================================================================
+
+    def put(self, ukey: bytes, value: bytes) -> None:
+        self.shard_for(ukey).put(ukey, value)
+
+    def delete(self, ukey: bytes) -> None:
+        self.shard_for(ukey).delete(ukey)
+
+    def get(self, ukey: bytes) -> Optional[bytes]:
+        return self.shard_for(ukey).get(ukey)
+
+    # ==================================================================
+    # Batched API
+    # ==================================================================
+
+    def write_batch(self, ops: Iterable[WriteOp]) -> None:
+        """Apply a batch of ('put', k, v) / ('del', k) ops, grouped per
+        shard.  Cross-shard reordering is safe — a key's ops stay on one
+        shard in submission order — and grouping gives each shard one
+        contiguous run of WAL appends (locality a real batch write has)."""
+        groups: List[List[WriteOp]] = [[] for _ in range(self.n_shards)]
+        for op in ops:
+            groups[shard_of(op[1], self.n_shards)].append(op)
+        for shard, group in zip(self.shards, groups):
+            for op in group:
+                if op[0] == "put":
+                    shard.put(op[1], op[2])
+                elif op[0] == "del":
+                    shard.delete(op[1])
+                else:
+                    raise ValueError(f"bad batch op {op[0]!r}")
+
+    def multi_get(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
+        """Point-read a batch of keys; results align with ``keys``.
+        Reads are grouped per shard so each shard serves its keys in one
+        contiguous run (one event-pump per group, cache locality)."""
+        out: List[Optional[bytes]] = [None] * len(keys)
+        groups: Dict[int, List[int]] = {}
+        for i, k in enumerate(keys):
+            groups.setdefault(shard_of(k, self.n_shards), []).append(i)
+        for sid, idxs in groups.items():
+            shard = self.shards[sid]
+            for i in idxs:
+                out[i] = shard.get(keys[i])
+        return out
+
+    def scan(self, start: bytes, count: int) -> List[Tuple[bytes, bytes]]:
+        """Cross-shard merging scan.  Each shard returns its ``count``
+        smallest keys ≥ start (sorted); the global first ``count`` keys
+        are therefore covered by the union, and hash partitioning makes
+        the per-shard streams disjoint — a plain k-way merge suffices."""
+        streams = [s.scan(start, count) for s in self.shards]
+        merged = _heapq.merge(*streams, key=lambda kv: kv[0])
+        out: List[Tuple[bytes, bytes]] = []
+        for kv in merged:
+            out.append(kv)
+            if len(out) >= count:
+                break
+        return out
+
+    # ==================================================================
+    # Lifecycle / background
+    # ==================================================================
+
+    def flush_all(self) -> None:
+        for s in self.shards:
+            if len(s.mem):
+                s._rotate_memtable()
+            s.maybe_schedule_background()
+        self.drain()
+
+    def drain(self, max_sim_s: float = 1e9) -> None:
+        """Quiesce every shard (single shared event heap)."""
+        self.sched_core.drain(max_sim_s)
+
+    # instrumentation hook fan-out (bench oracle support)
+    @property
+    def on_user_write(self) -> Optional[Callable[[bytes, int, bytes], None]]:
+        return self._on_user_write
+
+    @on_user_write.setter
+    def on_user_write(self, fn: Optional[Callable[[bytes, int, bytes], None]]
+                      ) -> None:
+        self._on_user_write = fn
+        for s in self.shards:
+            s.on_user_write = fn
+
+    # ==================================================================
+    # Aggregated stats
+    # ==================================================================
+
+    def space_usage(self) -> Dict[str, object]:
+        per = [s.space_usage() for s in self.shards]
+        lvl = [sum(p["index_level_bytes"][i] for p in per)
+               for i in range(self.opts.num_levels)]
+        tot_v = sum(p["value_total_bytes"] for p in per)
+        live_v = sum(p["value_live_bytes"] for p in per)
+        return {
+            "total_bytes": self.device.total_bytes(),
+            "index_bytes": sum(lvl),
+            "index_level_bytes": lvl,
+            "value_total_bytes": tot_v,
+            "value_live_bytes": live_v,
+            "s_index": _s_index(lvl),
+            "exposed_ratio": (tot_v - live_v) / live_v if live_v > 0 else 0.0,
+            "global_garbage_ratio": (tot_v - live_v) / tot_v
+            if tot_v > 0 else 0.0,
+            "per_shard": per,
+        }
+
+    def stats(self) -> Dict[str, object]:
+        counters: Dict[str, float] = {}
+        gc_step: Dict[str, float] = {}
+        for s in self.shards:
+            for k, v in s.stats_counters.items():
+                counters[k] = counters.get(k, 0) + v
+            for k, v in s.gc_step_time.items():
+                gc_step[k] = gc_step.get(k, 0.0) + v
+        hits = sum(s.cache.hits for s in self.shards)
+        queries = sum(s.cache.hits + s.cache.misses for s in self.shards)
+        return {
+            "sim_time_s": self.clock.now,
+            "n_shards": self.n_shards,
+            "space": self.space_usage(),
+            "io": self.device.stats.snapshot(),
+            "counters": counters,
+            "gc_step_time_s": gc_step,
+            "cache_hit_ratio": hits / queries if queries else 0.0,
+            "max_gc_threads": self.sched_core.max_gc,
+            "gc_bw_fraction": self.sched_core.gc_write_limiter.fraction,
+            "per_shard_counters": [dict(s.stats_counters)
+                                   for s in self.shards],
+        }
+
+
+def _s_index(level_sizes: List[int]) -> float:
+    """Space amplification of the merged index tree (paper eq. 1 shape,
+    same formula as VersionSet.s_index over summed level sizes)."""
+    nonempty = [i for i, s in enumerate(level_sizes) if s > 0]
+    if not nonempty:
+        return 1.0
+    last = nonempty[-1]
+    k_l = level_sizes[last]
+    k_u = sum(level_sizes[:last])
+    return (k_u + k_l) / k_l if k_l else 1.0

@@ -39,6 +39,25 @@ _DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
                 "s8": 1, "u8": 1, "pred": 1, "s64": 8, "f64": 8}
 
 
+def _cost_dict(cost) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` output to one flat dict.
+
+    Older JAX returns a dict; newer releases return a list of
+    per-computation dicts — sum the numeric entries across them."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        merged: dict = {}
+        for d in cost:
+            for k, v in (d or {}).items():
+                try:
+                    merged[k] = merged.get(k, 0.0) + float(v)
+                except (TypeError, ValueError):
+                    merged.setdefault(k, v)
+        return merged
+    return dict(cost)
+
+
 def collective_bytes(hlo_text: str) -> dict:
     """Sum result-shape bytes of every collective op in the HLO."""
     out = {}
@@ -97,7 +116,7 @@ def _compile_cell(cfg, shape: str, mesh, rules, train_overrides=None):
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
         compiled = jitted.lower(*abstract).compile()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled.cost_analysis())
     coll = collective_bytes(compiled.as_text())
     return compiled, cost, coll
 

@@ -1,0 +1,10 @@
+"""Path hook for the src layout: makes ``python -m pytest`` work without
+setting PYTHONPATH=src (marker registration lives in pyproject.toml)."""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

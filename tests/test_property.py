@@ -1,6 +1,10 @@
 """Hypothesis property tests: the engine is equivalent to a dict under
 arbitrary op sequences, for every KV-separation design."""
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 
