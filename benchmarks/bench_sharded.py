@@ -5,7 +5,14 @@ shard router with batched ops (write_batch / multi_get); the shards share
 one device and one background lane pool, so the dynamic GC scheduler
 arbitrates lanes globally across shards.
 
-Rows: sharded/<system>/s<N>,us_per_op,kops=..,amp=..,stall=..,gc=..
+Rows: sharded/<system>/s<N>,us_per_op,kops=..,amp=..,stall=..,gc=..,wal/op=..
+
+``walL/op`` is WAL device syncs per operation for the pure-write load
+phase: ≈1.0 with per-op commits, ≈1/BATCH (+ε for memtable-rotation
+syncs) under the cross-shard group commit.  ``wal/op`` is the same for
+the mixed YCSB-A phase, where interleaved reads cut write batches short
+(read-your-writes ordering), so it sits between 1/BATCH and the
+read/write ratio.
 
 Env (see common.py): REPRO_BENCH_MB, REPRO_BENCH_SYSTEMS, REPRO_BENCH_FAST
   REPRO_BENCH_SHARDS   comma list of shard counts (default 1,2,4,8)
@@ -42,9 +49,9 @@ def run() -> list:
     for system in systems():
         for n in shard_counts():
             db = make_db(system, spec, n_shards=n)
-            run_phase(db, "load",
-                      gen_multi_client(spec, n_clients, "load"),
-                      drain=True, batch=BATCH)
+            ld = run_phase(db, "load",
+                           gen_multi_client(spec, n_clients, "load"),
+                           drain=True, batch=BATCH)
             r = run_phase(db, "ycsb-a",
                           gen_multi_client(spec, n_clients, "ycsb-a",
                                            n_ops=n_ops),
@@ -57,5 +64,7 @@ def run() -> list:
                 f"amp={space_amplification(db):.3f} "
                 f"stall={s['counters']['stall_time_s']:.3f} "
                 f"gc={s['counters']['gc_runs']:.0f} "
-                f"flushes={s['counters']['flushes']:.0f}")
+                f"flushes={s['counters']['flushes']:.0f} "
+                f"walL/op={ld.wal_syncs_per_op:.4f} "
+                f"wal/op={r.wal_syncs_per_op:.4f}")
     return rows

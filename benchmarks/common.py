@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import os
 import sys
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 

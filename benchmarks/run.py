@@ -5,6 +5,12 @@ Prints ``name,us_per_call,derived`` CSV rows.  Selection:
     PYTHONPATH=src python -m benchmarks.run              # everything
     PYTHONPATH=src python -m benchmarks.run space_time   # one suite
     REPRO_BENCH_FAST=1 ... -m benchmarks.run             # CI smoke sizes
+    ... -m benchmarks.run sharded --json=out.json        # machine-readable
+
+``--json=PATH`` (or ``REPRO_BENCH_JSON=PATH``) additionally writes
+``{suite: {rows: [...], seconds: ...}, ...}`` so CI can archive each
+run's output as an artifact and the perf trajectory stays inspectable
+per-PR.
 
 Suites:
   space_time     Fig. 3/14-16  (throughput + space amp + tail latency)
@@ -20,12 +26,18 @@ Suites:
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
 
 def main() -> None:
     which = set(a for a in sys.argv[1:] if not a.startswith("-"))
+    json_path = os.environ.get("REPRO_BENCH_JSON")
+    for a in sys.argv[1:]:
+        if a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
     from . import (bench_features, bench_gc_breakdown, bench_micro,
                    bench_sharded, bench_space_sources, bench_space_time,
                    bench_ycsb)
@@ -49,17 +61,28 @@ def main() -> None:
     except Exception:
         pass
     print("name,us_per_call,derived")
+    report = {}
     for name, fn in suites.items():
         if which and name not in which:
             continue
         t0 = time.time()
+        rows = []
         try:
             for row in fn():
+                rows.append(row)
                 print(row, flush=True)
         except Exception as e:  # keep the suite going; surface the failure
-            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
-        print(f"# suite {name} done in {time.time() - t0:.0f}s",
+            err = f"{name}/ERROR,0.0,{type(e).__name__}:{e}"
+            rows.append(err)
+            print(err, flush=True)
+        dt = time.time() - t0
+        report[name] = {"rows": rows, "seconds": round(dt, 3)}
+        print(f"# suite {name} done in {dt:.0f}s",
               file=sys.stderr, flush=True)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {json_path}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

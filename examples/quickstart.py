@@ -45,3 +45,15 @@ print("sharded scan:", [k for k, _ in sdb.scan(b"k", 5)])
 print("sharded space:", {k: v for k, v in sdb.space_usage().items()
                          if k in ("total_bytes", "index_bytes",
                                   "value_live_bytes")})
+
+# Cross-shard group commit: every write_batch is made durable by ONE
+# coalesced WAL sync, however many shards the batch touches — compare
+# wal syncs/records with and without batching.
+sdb2 = ShardedKVStore(preset("scavenger_plus"), n_shards=4)
+for j in range(8):
+    sdb2.write_batch([("put", b"g%05d" % (64 * j + i), b"v" * 1024)
+                      for i in range(64)])
+w = sdb2.stats()["wal"]
+print(f"group commit: {w['records']} records in {w['syncs']} wal_syncs "
+      f"({w['records'] / w['syncs']:.0f} records/sync)")
+assert w["syncs"] < w["records"] / 16

@@ -10,9 +10,9 @@ import time
 from typing import Dict, Iterable, Optional
 
 from ..core.db import KVStore
-from ..core.options import Options, preset
+from ..core.options import preset
 from ..core.sharded import ShardedKVStore
-from ..store.format import VT_DELETE, VT_VALUE
+from ..store.format import VT_VALUE
 from .workloads import KEY_BYTES, Op, ScaleConfig, WorkloadSpec
 
 
@@ -64,10 +64,26 @@ class PhaseResult:
     p50_us: float = 0.0
     p99_us: float = 0.0
     p999_us: float = 0.0
+    wal_syncs: int = 0
+
+    @property
+    def wal_syncs_per_op(self) -> float:
+        """Device syncs charged for WAL durability per operation: ≈1.0
+        for per-op commits, ≈1/batch under group commit."""
+        return self.wal_syncs / max(1, self.ops)
 
     def row(self) -> str:
         us = 1e6 * self.sim_seconds / max(1, self.ops)
         return f"{self.name},{us:.2f},{self.kops_per_s:.2f}kops/s"
+
+
+def wal_sync_count(db) -> int:
+    """Cumulative WAL syncs for a KVStore or ShardedKVStore (the counter
+    lives on the scheduler core, which shards share)."""
+    core = getattr(db, "sched_core", None)
+    if core is None:
+        core = db.sched.core
+    return core.wal_syncs
 
 
 def make_db(system: str, spec: WorkloadSpec,
@@ -102,6 +118,7 @@ def run_phase(db, name: str, ops: Iterable[Op],
     st = db.device.stats
     r0 = st.read_bytes()
     w0 = st.write_bytes()
+    s0 = wal_sync_count(db)
     t0 = db.clock.now
     wall0 = time.perf_counter()
     n = 0
@@ -175,7 +192,8 @@ def run_phase(db, name: str, ops: Iterable[Op],
     res = PhaseResult(name=name, ops=n, sim_seconds=sim, wall_seconds=wall,
                       kops_per_s=n / max(sim, 1e-12) / 1e3,
                       io_read_bytes=st.read_bytes() - r0,
-                      io_write_bytes=st.write_bytes() - w0)
+                      io_write_bytes=st.write_bytes() - w0,
+                      wal_syncs=wal_sync_count(db) - s0)
     if lats:
         lats.sort()
         res.p50_us = 1e6 * lats[len(lats) // 2]

@@ -21,7 +21,7 @@ import msgpack
 import numpy as np
 
 from ..core.db import KVStore
-from ..core.options import Options, preset
+from ..core.options import preset
 from ..store.device import FSBlockDevice
 
 CHUNK = 1 << 20          # 1 MiB shard chunks

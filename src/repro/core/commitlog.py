@@ -1,0 +1,254 @@
+"""Group-commit write-ahead logging (the commit pipeline).
+
+The paper's dynamic GC scheduler (Section III-D) exists because foreground
+writes and background I/O fight over one device budget; the WAL is the
+foreground half of that fight.  This module extracts WAL ownership out of
+``KVStore`` into two commit sinks behind one interface:
+
+* :class:`SoloCommitSink` — a standalone store's WAL exactly as before:
+  one log file per memtable, one device append (≈ one sync) per record.
+* :class:`SharedCommitSink` — a shard's view over a single
+  :class:`GroupCommitLog` shared by every shard of a ``ShardedKVStore``.
+  Records are framed with a *shard tag* and interleaved in shared segment
+  files; a ``write_batch`` opens a commit *group* (leader/follower queue:
+  followers enqueue encoded records, the group leader — the outermost
+  ``group()`` frame — drains the queue on exit) so the whole cross-shard
+  batch costs **one** device sync instead of one per record.
+
+Durability ordering is preserved at every boundary that can expose state:
+segment rotation, non-WAL-class appends (Titan GC write-back) and group
+exit all force the pending queue to the device first, so a segment's byte
+order equals per-shard sequence order and crash replay stays a single
+forward pass (torn tails tolerated, exactly like the solo WAL).
+
+Sync accounting is routed through :class:`~.scheduler.SchedulerCore`
+(``note_wal_sync``) so the bandwidth governor sees a batch as one charged
+sync, not N appends — and so benchmarks can report ``wal_syncs/op``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from typing import Callable, Iterator, List, Optional, Tuple
+
+from ..store.blocks import decode_record, decode_varint, encode_varint
+from ..store.device import BlockDevice, IOClass
+from ..store.memtable import WAL, encode_wal_record
+
+
+@dataclasses.dataclass
+class MemtableLog:
+    """Handle for the log extent(s) backing one memtable.
+
+    A solo memtable owns exactly one WAL file; a shard's memtable may span
+    several shared segments (another shard's rotation moves the active
+    segment under it).  The handle travels with the immutable memtable and
+    is released when its flush completes.
+    """
+
+    fids: List[int] = dataclasses.field(default_factory=list)
+
+
+class SoloCommitSink:
+    """Today's standalone-store WAL semantics behind the sink interface:
+    one file per memtable, one device append per record."""
+
+    def __init__(self, device: BlockDevice, core=None) -> None:
+        self.device = device
+        self.core = core                     # SchedulerCore (sync accounting)
+        self.on_open: Optional[Callable[[int], None]] = None
+        self._wal: Optional[WAL] = None
+
+    def start(self) -> None:
+        self._open()
+
+    def _open(self) -> None:
+        self._wal = WAL(self.device)
+        if self.on_open is not None:
+            self.on_open(self._wal.fid)
+
+    def append(self, ukey: bytes, seq: int, vtype: int, payload: bytes,
+               cls: IOClass = IOClass.WAL) -> None:
+        nbytes = self._wal.append(ukey, seq, vtype, payload, cls)
+        # Only foreground WAL commits count as syncs; out-of-band classes
+        # (Titan GC write-back) are charged to their own I/O class and
+        # governed by the GC limiters already.
+        if self.core is not None and cls == IOClass.WAL:
+            self.core.note_wal_sync(nbytes, 1)
+
+    def rotate(self) -> MemtableLog:
+        handle = MemtableLog([self._wal.fid])
+        self._open()
+        return handle
+
+    def flushed(self, handle: MemtableLog) -> None:
+        for fid in handle.fids:
+            self.device.delete(fid)
+
+
+class GroupCommitLog:
+    """One write-ahead log shared by every shard of a sharded store.
+
+    Records are framed ``varint(shard_tag) + wal_record`` and appended to
+    the *active segment*.  Inside a commit group, encoded records queue in
+    ``_pending`` and the leader issues a single coalesced device append on
+    group exit; outside a group each record is appended (synced)
+    immediately, preserving single-op durability semantics.
+
+    Segment lifecycle mirrors RocksDB's shared WAL across column families:
+    any shard's memtable rotation rotates the segment, and a segment is
+    deleted once every memtable holding records in it has flushed
+    (refcounts via :meth:`retain`/:meth:`release`; the active segment is
+    never deleted).
+    """
+
+    def __init__(self, device: BlockDevice, core=None) -> None:
+        self.device = device
+        self.core = core
+        self.active_fid = device.create()
+        self._refs: dict = {}                # segment fid -> live handles
+        self._pending: List[bytes] = []      # encoded records awaiting sync
+        self._pending_records = 0
+        self._group_depth = 0
+        self.syncs = 0
+        self.records = 0
+        self.bytes = 0
+
+    # -- commit groups (leader/follower queue) --------------------------
+    @contextmanager
+    def group(self):
+        """Open a commit group.  Nested frames are followers — only the
+        outermost (the leader) drains the queue with one device sync."""
+        self._group_depth += 1
+        try:
+            yield self
+        finally:
+            self._group_depth -= 1
+            if self._group_depth == 0:
+                self.sync()
+
+    def append(self, shard_tag: int, ukey: bytes, seq: int, vtype: int,
+               payload: bytes, cls: IOClass = IOClass.WAL) -> int:
+        """Append one framed record; returns the segment fid it targets."""
+        rec = encode_varint(shard_tag) + encode_wal_record(
+            ukey, seq, vtype, payload)
+        if self._group_depth > 0 and cls == IOClass.WAL:
+            self._pending.append(rec)
+            self._pending_records += 1
+        else:
+            # Out-of-band class (e.g. Titan GC write-back) or no group
+            # open: flush the queue first so segment byte order equals
+            # per-shard sequence order, then write through.
+            self.sync()
+            self._write_out([rec], 1, cls)
+        return self.active_fid
+
+    def sync(self) -> None:
+        """Drain the pending queue with one coalesced device append."""
+        if self._pending:
+            recs, n = self._pending, self._pending_records
+            self._pending, self._pending_records = [], 0
+            self._write_out(recs, n, IOClass.WAL)
+
+    def _write_out(self, recs: List[bytes], n: int, cls: IOClass) -> None:
+        buf = b"".join(recs)
+        self.device.append(self.active_fid, buf, cls)
+        # Foreground WAL commits only — out-of-band classes (Titan GC
+        # write-back) are charged to their own I/O class and already
+        # governed by the GC limiters; counting them here would skew
+        # wal_syncs/op and feed GC bytes into the governor's foreground
+        # write window.
+        if cls == IOClass.WAL:
+            self.syncs += 1
+            self.records += n
+            self.bytes += len(buf)
+            if self.core is not None:
+                self.core.note_wal_sync(len(buf), n)
+
+    # -- segment lifecycle ----------------------------------------------
+    def retain(self, fid: int) -> None:
+        self._refs[fid] = self._refs.get(fid, 0) + 1
+
+    def release(self, fids: List[int]) -> None:
+        for fid in fids:
+            n = self._refs.get(fid, 0) - 1
+            self._refs[fid] = n
+            if n <= 0 and fid != self.active_fid:
+                self._drop(fid)
+
+    def rotate_segment(self) -> int:
+        """Start a new segment (any shard's memtable rotation lands here).
+        Pending records are synced first — they belong to the old extent."""
+        self.sync()
+        old = self.active_fid
+        self.active_fid = self.device.create()
+        if self._refs.get(old, 0) <= 0:
+            self._drop(old)
+        return self.active_fid
+
+    def _drop(self, fid: int) -> None:
+        self._refs.pop(fid, None)
+        self.device.delete(fid)
+
+    # -- crash replay ----------------------------------------------------
+    @staticmethod
+    def replay(device: BlockDevice, fid: int
+               ) -> Iterator[Tuple[int, bytes, int, int, bytes]]:
+        """Yield ``(shard_tag, ukey, seq, vtype, payload)`` from one
+        segment.  Stops cleanly at a torn tail: a record whose varint
+        header runs off the buffer *or* whose declared key/payload length
+        exceeds the remaining bytes is discarded along with everything
+        after it (a partial group append never surfaces half a record)."""
+        buf = device.read_all(fid, IOClass.MANIFEST)
+        n = len(buf)
+        pos = 0
+        while pos < n:
+            try:
+                tag, p = decode_varint(buf, pos)
+                seq, p = decode_varint(buf, p)
+                vtype, p = decode_varint(buf, p)
+                ukey, payload, p = decode_record(buf, p)
+            except IndexError:          # varint ran off the torn tail
+                return
+            if p > n:                   # body truncated mid-key/payload
+                return
+            pos = p
+            yield tag, ukey, seq, vtype, payload
+
+
+class SharedCommitSink:
+    """One shard's commit view over a :class:`GroupCommitLog`.
+
+    Tracks which shared segments the shard's *current* memtable has
+    records in; the first record into a segment retains it and fires
+    ``on_open`` so the shard's manifest can log the dependency (the same
+    ``{"wal": fid}`` edit a solo store writes, now possibly several per
+    memtable)."""
+
+    def __init__(self, log: GroupCommitLog, shard_tag: int) -> None:
+        self.log = log
+        self.tag = shard_tag
+        self.on_open: Optional[Callable[[int], None]] = None
+        self._handle = MemtableLog()
+
+    def start(self) -> None:
+        pass                    # segments are claimed lazily, on first write
+
+    def append(self, ukey: bytes, seq: int, vtype: int, payload: bytes,
+               cls: IOClass = IOClass.WAL) -> None:
+        fid = self.log.append(self.tag, ukey, seq, vtype, payload, cls)
+        if fid not in self._handle.fids:
+            self._handle.fids.append(fid)
+            self.log.retain(fid)
+            if self.on_open is not None:
+                self.on_open(fid)
+
+    def rotate(self) -> MemtableLog:
+        handle = self._handle
+        self._handle = MemtableLog()
+        self.log.rotate_segment()
+        return handle
+
+    def flushed(self, handle: MemtableLog) -> None:
+        self.log.release(handle.fids)

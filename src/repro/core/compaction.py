@@ -19,7 +19,7 @@ import heapq
 from typing import Callable, Iterator, List, Optional, Tuple
 
 from ..store.device import IOClass
-from ..store.format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF, VT_VALUE,
+from ..store.format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF,
                             decode_ka, encode_ka, entry_value_size, entry_vsst)
 from ..store.tables import Entry, KTableWriter, LogTableWriter
 from .version import FileMeta, VersionSet

@@ -24,6 +24,8 @@ from ..store.memtable import WAL, Memtable
 from ..store.tables import (Entry, KTableReader, KTableWriter, LogTableReader,
                             LogTableWriter, RTableReader, RTableWriter,
                             VBTableReader, VBTableWriter)
+from .commitlog import (GroupCommitLog, MemtableLog, SharedCommitSink,
+                        SoloCommitSink)
 from .compaction import execute_compaction, plan_compaction
 from .dropcache import DropCache
 from .gc import pick_gc_candidate, run_gc_terark, run_gc_titan
@@ -40,7 +42,9 @@ class KVStore:
     def __init__(self, opts: Options, device: Optional[BlockDevice] = None,
                  recover: bool = False,
                  sched_core: Optional[SchedulerCore] = None,
-                 manifest_fid: int = 1) -> None:
+                 manifest_fid: int = 1,
+                 commit_log: Optional[GroupCommitLog] = None,
+                 shard_tag: int = 0) -> None:
         self.opts = opts.validate()
         self.device = device or BlockDevice(Clock(), CostModel())
         self.clock = self.device.clock
@@ -64,24 +68,32 @@ class KVStore:
         self.dropcache = DropCache(opts.dropcache_entries)
         self.mem = Memtable()
         if recover:
-            # Replay every WAL logged since the last completed flush, in
-            # order (earlier seqs overwritten by later ones in the dict).
-            for wal_fid in list(self.versions.pending_wals):
-                if not self.device.exists(wal_fid):
-                    continue
-                for ukey, seq, vtype, payload in WAL.replay(self.device,
-                                                            wal_fid):
-                    self.mem.put(ukey, seq, vtype, payload)
-                    self.versions.seq = max(self.versions.seq, seq)
-                self.device.delete(wal_fid)
-            self.versions.pending_wals.clear()
+            if commit_log is None:
+                # Replay every WAL logged since the last completed flush,
+                # in order (earlier seqs overwritten by later ones).
+                for wal_fid in list(self.versions.pending_wals):
+                    if not self.device.exists(wal_fid):
+                        continue
+                    for ukey, seq, vtype, payload in WAL.replay(self.device,
+                                                                wal_fid):
+                        self.mem.put(ukey, seq, vtype, payload)
+                        self.versions.seq = max(self.versions.seq, seq)
+                    self.device.delete(wal_fid)
+                self.versions.pending_wals.clear()
+            # else: pending segments interleave records from every shard —
+            # the owning ShardedKVStore replays them once, routing records
+            # by shard tag, then clears the pending lists.
             self.device.charge_time = True
-        self.wal = WAL(self.device)
-        self.versions.log_edit({"wal": self.wal.fid,
-                                "seq": self.versions.seq})
-        self.versions.active_wal = self.wal.fid
-        self.versions.pending_wals.append(self.wal.fid)
-        self.immutables: List[Tuple[Memtable, WAL]] = []
+        # Commit sink: solo stores keep per-memtable WAL files with one
+        # append per record; shards of a sharded store write framed,
+        # shard-tagged records through one shared GroupCommitLog.
+        if commit_log is not None:
+            self.sink = SharedCommitSink(commit_log, shard_tag)
+        else:
+            self.sink = SoloCommitSink(self.device, core=self.sched.core)
+        self.sink.on_open = self._note_wal_open
+        self.sink.start()
+        self.immutables: List[Tuple[Memtable, MemtableLog]] = []
         self._readers: Dict[int, object] = {}
         self.stats_counters: Dict[str, float] = {
             "puts": 0, "gets": 0, "deletes": 0, "scans": 0, "flushes": 0,
@@ -109,11 +121,18 @@ class KVStore:
         self._write(ukey, VT_DELETE, b"")
         self.stats_counters["deletes"] += 1
 
+    def _note_wal_open(self, fid: int) -> None:
+        """The active memtable gained a dependency on log file ``fid`` —
+        record it in the manifest so recovery knows to replay it (the
+        same edit manifest replay applies, so live and recovered
+        pending-WAL state cannot diverge)."""
+        self.versions.apply_edit({"wal": fid, "seq": self.versions.seq})
+
     def _write(self, ukey: bytes, vtype: int, payload: bytes) -> None:
         self.sched.pump()
         self._maybe_stall()
         self.versions.seq += 1
-        self.wal.append(ukey, self.versions.seq, vtype, payload)
+        self.sink.append(ukey, self.versions.seq, vtype, payload)
         self.mem.put(ukey, self.versions.seq, vtype, payload)
         self.device.charge_cpu()
         if self.on_user_write is not None:
@@ -130,18 +149,15 @@ class KVStore:
                           cls: IOClass) -> None:
         """Internal write used by Titan-style GC Write-Index."""
         self.versions.seq += 1
-        self.wal.append(ukey, self.versions.seq, vtype, payload, cls)
+        self.sink.append(ukey, self.versions.seq, vtype, payload, cls)
         self.mem.put(ukey, self.versions.seq, vtype, payload)
         if self.mem.approx_bytes >= self.opts.memtable_bytes:
             self._rotate_memtable()
 
     def _rotate_memtable(self) -> None:
-        self.immutables.append((self.mem, self.wal))
+        handle = self.sink.rotate()
+        self.immutables.append((self.mem, handle))
         self.mem = Memtable()
-        self.wal = WAL(self.device)
-        self.versions.log_edit({"wal": self.wal.fid,
-                                "seq": self.versions.seq})
-        self.versions.active_wal = self.wal.fid
         self.maybe_schedule_background()
 
     # -- stalls ----------------------------------------------------------
@@ -426,13 +442,13 @@ class KVStore:
                                   ) -> None:
         # flush
         while self.immutables and self.sched.can_admit(JOB_FLUSH):
-            imm, wal = self.immutables[0]
+            imm, handle = self.immutables[0]
             busy = getattr(imm, "_flushing", False)
             if busy:
                 break
             imm._flushing = True  # type: ignore[attr-defined]
-            self.sched.run_job(JOB_FLUSH, lambda i=imm, w=wal:
-                               self._flush_body(i, w))
+            self.sched.run_job(JOB_FLUSH, lambda i=imm, h=handle:
+                               self._flush_body(i, h))
         # compaction
         while self.sched.can_admit(JOB_COMPACTION):
             plan = plan_compaction(self.versions, self.opts)
@@ -469,7 +485,7 @@ class KVStore:
                 self.device.stats.by_class[c].time_s - before[c]
         return effects
 
-    def _flush_body(self, imm: Memtable, wal: WAL):
+    def _flush_body(self, imm: Memtable, handle: MemtableLog):
         opts = self.opts
         ksst_writers: List[Tuple[int, dict]] = []
         kw = KTableWriter(self.device, opts.block_bytes,
@@ -536,12 +552,13 @@ class KVStore:
             if self.immutables and self.immutables[0][0] is imm:
                 self.immutables.pop(0)
             else:   # defensive: remove wherever it is
-                self.immutables = [(m, w) for m, w in self.immutables
+                self.immutables = [(m, h) for m, h in self.immutables
                                    if m is not imm]
-            wal.close()
-            self.versions.log_edit({"wal_done": wal.fid})
-            if wal.fid in self.versions.pending_wals:
-                self.versions.pending_wals.remove(wal.fid)
+            self.sink.flushed(handle)
+            for fid in handle.fids:
+                self.versions.log_edit({"wal_done": fid})
+                if fid in self.versions.pending_wals:
+                    self.versions.pending_wals.remove(fid)
             self.stats_counters["flushes"] += 1
             self.sched.note_flush(flushed_bytes, max(elapsed, 1e-9))
             self.after_background()
@@ -607,6 +624,11 @@ class KVStore:
             "pressure_value": p_v,
             "max_gc_threads": self.sched.max_gc,
             "gc_bw_fraction": self.sched.gc_write_limiter.fraction,
+            # Core-level commit accounting: for a shard of a sharded store
+            # the scheduler core — and therefore this counter — is shared
+            # with its siblings (a group sync is one sync, not one per
+            # shard), so read it once at the front-end, not per shard.
+            "wal": self.sched.core.wal_stats(),
             "dropcache": {"size": len(self.dropcache),
                           "inserts": self.dropcache.inserts,
                           "hit_rate": (self.dropcache.hits /

@@ -26,7 +26,7 @@ from typing import Callable, List, Optional, Tuple
 from ..store.device import IOClass
 from ..store.format import (VT_INDEX_KA, VT_INDEX_KF, decode_ka, decode_kf,
                             encode_ka)
-from ..store.tables import LogTableWriter, RTableWriter, VBTableWriter
+from ..store.tables import LogTableWriter
 from .version import VSSTMeta
 
 

@@ -116,6 +116,12 @@ class SchedulerCore:
         self._win_write_bytes = 0
         self._win_flush_time = 0.0
         self.throttle_events = 0
+        # WAL commit accounting: a group commit is *one* charged sync
+        # however many records it coalesces, and that is what the
+        # bandwidth governor's write window sees (not N appends).
+        self.wal_syncs = 0
+        self.wal_records = 0
+        self.wal_bytes = 0
 
     # -- event pump ------------------------------------------------------
     def push_event(self, when: float, fn: Callable[[], None]) -> None:
@@ -193,6 +199,17 @@ class SchedulerCore:
 
     def note_write(self, nbytes: int) -> None:
         self._win_write_bytes += nbytes
+
+    def note_wal_sync(self, nbytes: int, nrecords: int = 1) -> None:
+        """Record one durable WAL sync covering ``nrecords`` records."""
+        self.wal_syncs += 1
+        self.wal_records += nrecords
+        self.wal_bytes += nbytes
+        self.note_write(nbytes)
+
+    def wal_stats(self) -> Dict[str, int]:
+        return {"syncs": self.wal_syncs, "records": self.wal_records,
+                "bytes": self.wal_bytes}
 
     def govern_bandwidth(self) -> None:
         if not self.opts.dynamic_scheduler:

@@ -15,13 +15,20 @@ background-thread pool.  ``ShardedKVStore`` reproduces that topology:
 * batched APIs (``write_batch`` / ``multi_get`` / merged ``scan``) route
   per shard, preserving per-key ordering (a key always hashes to the same
   shard);
+* all shards commit through one :class:`~.commitlog.GroupCommitLog`:
+  a ``write_batch`` opens a commit group so the whole cross-shard batch
+  is coalesced into a single framed segment append — **one** WAL sync per
+  batch instead of one per record (records carry a shard tag; per-shard
+  sequence stamping is preserved);
 * a *superblock* — always fid 1, the first file created — records the
   shard count and each shard's manifest fid so ``recover=True`` can replay
-  every shard's manifest + WALs after a crash.
+  every shard's manifest, then route the interleaved commit-log segments
+  back to their shards by tag (torn tails tolerated).
 
 Per-shard memtables follow RocksDB column-family semantics (each shard
-owns one); the block-cache budget is divided evenly so total memory does
-not scale with shard count.
+owns one); the block-cache budget is divided across shards with the
+remainder granted to shard 0, so the shard budgets sum exactly to the
+configured device-wide budget.
 """
 
 from __future__ import annotations
@@ -34,6 +41,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 import msgpack
 
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
+from .commitlog import GroupCommitLog
 from .db import KVStore
 from .options import Options
 from .scheduler import SchedulerCore
@@ -62,22 +70,30 @@ class ShardedKVStore:
         if recover:
             sb = self._read_superblock()
             n_shards = sb["n_shards"]
-            shard_opts = self._shard_opts(n_shards)
-            for mf in sb["manifests"]:
+            self.commitlog = GroupCommitLog(self.device,
+                                            core=self.sched_core)
+            budgets = self._shard_cache_budgets(n_shards)
+            for tag, mf in enumerate(sb["manifests"]):
                 self.shards.append(
-                    KVStore(shard_opts, device=self.device, recover=True,
-                            sched_core=self.sched_core, manifest_fid=mf))
+                    KVStore(self._shard_opts(budgets[tag]),
+                            device=self.device, recover=True,
+                            sched_core=self.sched_core, manifest_fid=mf,
+                            commit_log=self.commitlog, shard_tag=tag))
+            self._replay_segments(n_shards)
         else:
             fid = self.device.create()
             if fid != SUPERBLOCK_FID:
                 raise RuntimeError(
                     "ShardedKVStore must be created on a fresh device "
                     f"(first fid is {fid}, expected {SUPERBLOCK_FID})")
-            shard_opts = self._shard_opts(n_shards)
-            for _ in range(n_shards):
+            self.commitlog = GroupCommitLog(self.device,
+                                            core=self.sched_core)
+            budgets = self._shard_cache_budgets(n_shards)
+            for tag in range(n_shards):
                 self.shards.append(
-                    KVStore(shard_opts, device=self.device,
-                            sched_core=self.sched_core))
+                    KVStore(self._shard_opts(budgets[tag]),
+                            device=self.device, sched_core=self.sched_core,
+                            commit_log=self.commitlog, shard_tag=tag))
             blob = msgpack.packb(
                 {"n_shards": n_shards,
                  "manifests": [s.versions.manifest_fid for s in self.shards]},
@@ -87,15 +103,62 @@ class ShardedKVStore:
                                IOClass.MANIFEST)
         self.n_shards = n_shards
 
-    def _shard_opts(self, n_shards: int) -> Options:
-        # One cache budget for the whole device, split across shards.
-        # Floor at a single block so the aggregate stays (near) constant
-        # across shard counts — the sweep must not conflate sharding with
-        # a growing cache budget.
-        return dataclasses.replace(
-            self.opts,
-            cache_bytes=max(self.opts.block_bytes,
-                            self.opts.cache_bytes // n_shards))
+    def _shard_cache_budgets(self, n_shards: int) -> List[int]:
+        """One cache budget for the whole device, split across shards.
+        Integer division drops up to ``n_shards - 1`` bytes — grant the
+        remainder to shard 0 so the split sums exactly to the configured
+        budget (the sweep must not conflate shard count with a shrinking
+        or growing aggregate cache budget)."""
+        base, rem = divmod(self.opts.cache_bytes, n_shards)
+        budgets = [base + rem] + [base] * (n_shards - 1)
+        assert sum(budgets) == self.opts.cache_bytes, \
+            (budgets, self.opts.cache_bytes)
+        # No per-shard floor: a slice below one block simply caches
+        # nothing (BlockCache drops over-capacity inserts), which keeps
+        # the aggregate exactly at the device-wide budget.
+        return budgets
+
+    def _shard_opts(self, cache_bytes: int) -> Options:
+        return dataclasses.replace(self.opts, cache_bytes=cache_bytes)
+
+    def _replay_segments(self, n_shards: int) -> None:
+        """Crash recovery: replay interleaved commit-log segments, routing
+        each record to its shard by tag.  Segments go in fid (creation)
+        order and records in append order, so per-shard sequence order is
+        preserved; a shard that already flushed a segment's records has
+        logged ``wal_done`` and skips it.  Torn tails are tolerated by
+        ``GroupCommitLog.replay``; a tag outside the superblock's shard
+        count is a hard error (stale superblock)."""
+        pending: Dict[int, set] = {}
+        for tag, s in enumerate(self.shards):
+            for fid in s.versions.pending_wals:
+                pending.setdefault(fid, set()).add(tag)
+        for s in self.shards:
+            s.versions.pending_wals.clear()
+        self.device.charge_time = False
+        # Re-log every surviving record through its shard's sink (one
+        # commit group — a single coalesced append into the fresh active
+        # segment) so recovered memtable state is durable again and a
+        # second crash before the next flush replays it identically.
+        with self.commitlog.group():
+            for fid in sorted(pending):
+                if not self.device.exists(fid):
+                    continue
+                for tag, ukey, seq, vtype, payload in GroupCommitLog.replay(
+                        self.device, fid):
+                    if tag >= n_shards:
+                        raise RuntimeError(
+                            f"commit-log segment {fid} carries shard tag "
+                            f"{tag} but the superblock says "
+                            f"n_shards={n_shards}: stale superblock / "
+                            "shard-count mismatch — refusing to recover")
+                    if tag in pending[fid]:
+                        shard = self.shards[tag]
+                        shard.versions.seq = max(shard.versions.seq, seq)
+                        shard.sink.append(ukey, seq, vtype, payload)
+                        shard.mem.put(ukey, seq, vtype, payload)
+                self.device.delete(fid)
+        self.device.charge_time = True
 
     def _read_superblock(self) -> dict:
         if not self.device.exists(SUPERBLOCK_FID):
@@ -136,20 +199,24 @@ class ShardedKVStore:
 
     def write_batch(self, ops: Iterable[WriteOp]) -> None:
         """Apply a batch of ('put', k, v) / ('del', k) ops, grouped per
-        shard.  Cross-shard reordering is safe — a key's ops stay on one
-        shard in submission order — and grouping gives each shard one
-        contiguous run of WAL appends (locality a real batch write has)."""
+        shard, under one commit group: every op's WAL record queues in the
+        shared GroupCommitLog and the batch is made durable by a single
+        coalesced segment append — one device sync per batch instead of
+        one per op.  Cross-shard reordering is safe — a key's ops stay on
+        one shard in submission order — and grouping gives each shard one
+        contiguous run of log records (locality a real batch write has)."""
         groups: List[List[WriteOp]] = [[] for _ in range(self.n_shards)]
         for op in ops:
             groups[shard_of(op[1], self.n_shards)].append(op)
-        for shard, group in zip(self.shards, groups):
-            for op in group:
-                if op[0] == "put":
-                    shard.put(op[1], op[2])
-                elif op[0] == "del":
-                    shard.delete(op[1])
-                else:
-                    raise ValueError(f"bad batch op {op[0]!r}")
+        with self.commitlog.group():
+            for shard, group in zip(self.shards, groups):
+                for op in group:
+                    if op[0] == "put":
+                        shard.put(op[1], op[2])
+                    elif op[0] == "del":
+                        shard.delete(op[1])
+                    else:
+                        raise ValueError(f"bad batch op {op[0]!r}")
 
     def multi_get(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
         """Point-read a batch of keys; results align with ``keys``.
@@ -249,6 +316,7 @@ class ShardedKVStore:
             "cache_hit_ratio": hits / queries if queries else 0.0,
             "max_gc_threads": self.sched_core.max_gc,
             "gc_bw_fraction": self.sched_core.gc_write_limiter.fraction,
+            "wal": self.sched_core.wal_stats(),
             "per_shard_counters": [dict(s.stats_counters)
                                    for s in self.shards],
         }

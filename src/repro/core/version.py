@@ -189,8 +189,14 @@ class VersionSet:
         if "seq" in edit:
             self.seq = max(self.seq, edit["seq"])
         if "wal" in edit:
+            # A solo store logs one WAL file per memtable; a shard of a
+            # sharded store logs every shared commit-log *segment* its
+            # memtable has records in (the owning front-end replays those
+            # segments, routing records by shard tag).  Dedup so replayed
+            # manifests cannot double-queue a segment.
             self.active_wal = edit["wal"]
-            self.pending_wals.append(edit["wal"])
+            if edit["wal"] not in self.pending_wals:
+                self.pending_wals.append(edit["wal"])
         if "wal_done" in edit:
             if edit["wal_done"] in self.pending_wals:
                 self.pending_wals.remove(edit["wal_done"])

@@ -7,9 +7,8 @@ reference path on CPU; on TPU hardware the kernels slot in unchanged.
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

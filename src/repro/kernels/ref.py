@@ -95,7 +95,6 @@ def compact_pages_ref(pool, valid) -> Tuple[jax.Array, jax.Array]:
     """Reference GC compaction: keep pages where valid, packed densely at
     the front (order-preserving).  Returns (new_pool, new_index_of_old)
     where new_index_of_old[i] = destination of page i or -1 if dropped."""
-    p = pool.shape[0]
     dst = jnp.cumsum(valid.astype(jnp.int32)) - 1
     new_index = jnp.where(valid, dst, -1)
     order = jnp.argsort(~valid, stable=True)   # valid pages first

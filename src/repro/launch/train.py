@@ -23,7 +23,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from ..checkpoint import CheckpointConfig, CheckpointStore
 from ..configs import get_config

@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 
@@ -76,7 +76,6 @@ class ModelConfig:
     def param_count(self) -> int:
         """Total parameters (for 6·N·D roofline bookkeeping)."""
         d, ff, v = self.d_model, self.d_ff, self.vocab
-        per_layer = 0
         n_attn = self.n_layers
         n_ssm = 0
         if self.family == "ssm":

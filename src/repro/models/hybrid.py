@@ -11,7 +11,7 @@ positions) follow the Jamba paper's block diagram.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

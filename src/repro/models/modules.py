@@ -13,7 +13,6 @@ interpret mode (CPU container — see DESIGN.md §6).
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Dict, Optional, Tuple
 

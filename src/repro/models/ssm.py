@@ -227,7 +227,6 @@ def forward(params: Params, batch: Dict, cfg: ModelConfig) -> jax.Array:
 
 
 def loss_fn(params: Params, batch: Dict, cfg: ModelConfig) -> jax.Array:
-    from .transformer import loss_fn as _lf  # same CE loss
     logits = forward(params, batch, cfg).astype(jnp.float32)
     targets = batch["targets"]
     logz = jax.scipy.special.logsumexp(logits, axis=-1)

@@ -11,7 +11,6 @@ so both variants are measured in §Perf).
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple, Union
 
 import jax

@@ -19,7 +19,7 @@ with the paper's pressure arithmetic (serving/scheduler.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -151,10 +151,6 @@ class PagedKVCache:
         for s, pages in self.tables.items():
             for p in pages:
                 valid[p] = True
-        order_hot = [p for s, t in self.tables.items()
-                     if not self.frozen.get(s) for p in t]
-        order_cold = [p for s, t in self.tables.items()
-                      if self.frozen.get(s) for p in t]
         total_dmas = 0
         # pool layout is (L, 2, P, ...): compact each (layer, kv) plane
         # with the same mapping — compute the plan once.

@@ -19,11 +19,8 @@ import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
-import jax.numpy as jnp
-import numpy as np
-
 from ..models.config import ModelConfig
-from .kvcache import PagedCacheConfig, PagedKVCache
+from .kvcache import PagedKVCache
 
 
 @dataclasses.dataclass

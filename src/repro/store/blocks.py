@@ -11,7 +11,7 @@ from __future__ import annotations
 import hashlib
 import struct
 from collections import OrderedDict
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 
 # --------------------------------------------------------------------------

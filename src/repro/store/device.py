@@ -21,7 +21,7 @@ from __future__ import annotations
 import enum
 import os
 from contextlib import contextmanager
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
 
 

@@ -11,7 +11,6 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 from .blocks import decode_record, encode_record, encode_varint, decode_varint
 from .device import BlockDevice, IOClass
-from .format import VT_DELETE
 
 Versioned = Tuple[int, int, bytes]  # (seq, vtype, payload)
 
@@ -45,6 +44,15 @@ class Memtable:
             yield k, self._data[k]
 
 
+def encode_wal_record(ukey: bytes, seq: int, vtype: int,
+                      payload: bytes) -> bytes:
+    """One log record: ``varint(seq) varint(vtype) record(key, payload)``.
+    Shared by the solo WAL and the group-commit log (which prefixes a
+    shard tag — see ``core.commitlog``)."""
+    return (encode_varint(seq) + encode_varint(vtype)
+            + encode_record(ukey, payload))
+
+
 class WAL:
     """Append-only log; one per memtable, truncated after flush."""
 
@@ -53,10 +61,11 @@ class WAL:
         self.fid = device.create()
 
     def append(self, ukey: bytes, seq: int, vtype: int, payload: bytes,
-               cls: IOClass = IOClass.WAL) -> None:
-        rec = (encode_varint(seq) + encode_varint(vtype)
-               + encode_record(ukey, payload))
+               cls: IOClass = IOClass.WAL) -> int:
+        """Append one record; returns its encoded size (sync accounting)."""
+        rec = encode_wal_record(ukey, seq, vtype, payload)
         self.device.append(self.fid, rec, cls)
+        return len(rec)
 
     def close(self) -> None:
         self.device.delete(self.fid)
@@ -69,9 +78,12 @@ class WAL:
         pos = 0
         while pos < len(buf):
             try:
-                seq, pos = decode_varint(buf, pos)
-                vtype, pos = decode_varint(buf, pos)
-                ukey, payload, pos = decode_record(buf, pos)
+                seq, p = decode_varint(buf, pos)
+                vtype, p = decode_varint(buf, p)
+                ukey, payload, p = decode_record(buf, p)
             except IndexError:      # torn tail write — stop at last good rec
                 return
+            if p > len(buf):        # body truncated mid-key/payload
+                return
+            pos = p
             yield ukey, seq, vtype, payload

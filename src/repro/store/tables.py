@@ -16,13 +16,13 @@ from __future__ import annotations
 
 import struct
 from bisect import bisect_left
-from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import msgpack
 
 from .blocks import BlockCache, BloomFilter, decode_record, encode_record
 from .device import BlockDevice, IOClass
-from .format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF, VT_VALUE,
+from .format import (VT_INDEX_KA, VT_INDEX_KF,
                      entry_value_size, entry_vsst, pack_ikey, unpack_ikey)
 
 FOOTER = struct.Struct("<6QBxxxxxxx")

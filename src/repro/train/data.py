@@ -9,7 +9,6 @@ from __future__ import annotations
 
 from typing import Dict
 
-import jax
 import numpy as np
 
 from ..models.config import ModelConfig

@@ -9,8 +9,7 @@ exactly this.  Gradient accumulation (microbatching) runs as a
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 restore into a 'like' tree."""
 
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointConfig, CheckpointStore
 

@@ -1,0 +1,189 @@
+"""Group-commit WAL: sync amortization, segment lifecycle, and crash
+recovery over interleaved multi-shard segments (torn tails, partial group
+appends, stale superblocks)."""
+
+import pytest
+
+from repro.core import KVStore, ShardedKVStore, preset
+from repro.core.commitlog import GroupCommitLog
+from repro.store.device import BlockDevice
+
+
+def _batch(lo, hi, vlen=700, prefix=b"k"):
+    return [("put", b"%s%06d" % (prefix, i), b"v" * vlen)
+            for i in range(lo, hi)]
+
+
+def test_write_batch_is_one_sync():
+    """Acceptance: a write_batch coalesces into one WAL sync (plus at most
+    the memtable-rotation syncs), vs one sync per op without batching."""
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=4)
+    core = db.sched_core
+    db.write_batch(_batch(0, 32))
+    first = core.wal_syncs
+    assert first == 1
+    assert core.wal_records == 32
+    n_batches = 20
+    for j in range(n_batches):
+        db.write_batch(_batch(32 * (j + 1), 32 * (j + 2)))
+    ops = 32 * (n_batches + 1)
+    rotations = sum(s.stats_counters["flushes"] for s in db.shards) \
+        + sum(len(s.immutables) for s in db.shards)
+    assert core.wal_records == ops
+    # one sync per batch + at most one extra per memtable rotation
+    assert core.wal_syncs <= (n_batches + 1) + rotations + 1
+    assert core.wal_syncs / ops <= 1 / 32 + 0.05
+
+
+def test_unbatched_put_keeps_per_op_durability():
+    """Single-op writes on a sharded store still sync immediately —
+    group amortization only applies inside an open commit group."""
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=2)
+    for i in range(50):
+        db.put(b"solo%04d" % i, b"x" * 600)
+    assert db.sched_core.wal_syncs >= 50
+
+
+def test_solo_store_semantics_unchanged():
+    db = KVStore(preset("scavenger_plus"))
+    for i in range(100):
+        db.put(b"p%04d" % i, b"y" * 800)
+    w = db.sched.core.wal_stats()
+    assert w["syncs"] == w["records"] == 100
+
+
+def test_interleaved_segment_replay_all_shards():
+    """Crash after batched writes: one shared segment holds interleaved
+    records from every shard; recovery routes them back by shard tag."""
+    device = BlockDevice()
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=3, device=device)
+    expect = {}
+    for j in range(6):
+        ops = _batch(100 * j, 100 * j + 60)
+        db.write_batch(ops)
+        for _, k, v in ops:
+            expect[k] = v
+    # every shard must have unflushed records in the shared log
+    touched = {db.shard_of(k) for k in expect}
+    assert touched == {0, 1, 2}
+    # crash: no drain, no flush; reopen from the same device
+    db2 = ShardedKVStore(preset("scavenger_plus"), device=device,
+                         recover=True)
+    assert db2.n_shards == 3
+    for k, v in expect.items():
+        assert db2.get(k) == v, k
+    # sequence watermarks recovered: new writes keep working and survive
+    # a second crash/recover cycle
+    db2.write_batch(_batch(0, 40, vlen=300, prefix=b"again"))
+    db3 = ShardedKVStore(preset("scavenger_plus"), device=device,
+                         recover=True)
+    assert db3.get(b"again%06d" % 5) == b"v" * 300
+    for k, v in expect.items():
+        assert db3.get(k) == v, k
+
+
+def test_torn_tail_after_partial_group_append():
+    """A crash can tear the tail of a group append; replay must keep every
+    record before the tear and drop the damaged remainder cleanly."""
+    device = BlockDevice()
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=2, device=device)
+    db.write_batch(_batch(0, 30, vlen=400))          # fully durable batch
+    seg = db.commitlog.active_fid
+    size_before = device.size(seg)
+    db.write_batch(_batch(1000, 1010, vlen=400))     # batch to be torn
+    # tear: keep the first durable batch plus half of the second append
+    tear_at = size_before + (device.size(seg) - size_before) // 2
+    device._files[seg] = device._files[seg][:tear_at]
+    db2 = ShardedKVStore(preset("scavenger_plus"), device=device,
+                         recover=True)
+    # everything before the tear survived ...
+    for i in range(30):
+        assert db2.get(b"k%06d" % i) == b"v" * 400, i
+    # ... the second batch is partially lost, with a clean prefix: once a
+    # key is missing, every later key of that shard is missing too.
+    per_shard = {0: [], 1: []}
+    for i in range(1000, 1010):
+        k = b"k%06d" % i
+        per_shard[db2.shard_of(k)].append(db2.get(k) is not None)
+    lost_any = False
+    for got in per_shard.values():
+        tail = got + [False]
+        first_miss = tail.index(False)
+        assert all(not g for g in tail[first_miss:]), got
+        lost_any = lost_any or not all(got)
+    assert lost_any          # the tear did remove something
+    # the recovered store accepts new writes
+    db2.write_batch(_batch(0, 5, vlen=200, prefix=b"post"))
+    assert db2.get(b"post%06d" % 3) == b"v" * 200
+
+
+def test_stale_superblock_shard_count_mismatch_is_clear_error():
+    """A superblock claiming fewer shards than the commit log's records
+    reference must fail loudly, not silently drop a shard's writes."""
+    import msgpack
+
+    device = BlockDevice()
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=3, device=device)
+    db.write_batch(_batch(0, 90))
+    assert {db.shard_of(b"k%06d" % i) for i in range(90)} == {0, 1, 2}
+    # simulate a stale superblock: claims 2 shards, lists 2 manifests
+    blob = msgpack.packb(
+        {"n_shards": 2,
+         "manifests": [s.versions.manifest_fid for s in db.shards[:2]]},
+        use_bin_type=True)
+    device._files[1] = bytearray(len(blob).to_bytes(4, "little") + blob)
+    with pytest.raises(RuntimeError, match="shard-count mismatch"):
+        ShardedKVStore(preset("scavenger_plus"), device=device, recover=True)
+
+
+def test_segments_released_after_flush():
+    """Flushed memtables release their shared segments: after a full
+    flush + drain no shard holds pending WAL segments and only the active
+    segment file remains on the device."""
+    device = BlockDevice()
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=4, device=device)
+    seen_segments = set()
+    for j in range(40):
+        db.write_batch(_batch(200 * j, 200 * j + 80, vlen=900))
+        for s in db.shards:
+            seen_segments.update(s.versions.pending_wals)
+    db.flush_all()
+    for s in db.shards:
+        assert s.versions.pending_wals == []
+    live = seen_segments & set(device.file_ids())
+    assert live <= {db.commitlog.active_fid}
+
+
+def test_cache_budget_split_sums_to_configured_budget():
+    """The block-cache budget split hands the division remainder to shard
+    0 — no silently dropped bytes, aggregate equals the device budget."""
+    opts = preset("scavenger_plus", cache_bytes=1_000_003)
+    for n in (1, 2, 3, 4, 7):
+        db = ShardedKVStore(opts, n_shards=n, device=BlockDevice())
+        got = [s.opts.cache_bytes for s in db.shards]
+        assert sum(got) == 1_000_003, (n, got)
+        # shard 0 carries the remainder; every other shard gets the base
+        assert got[0] == 1_000_003 // n + 1_000_003 % n
+        assert all(b == 1_000_003 // n for b in got[1:])
+    # tiny budgets: slices below one block are NOT floored up — the
+    # aggregate must still equal the configured budget exactly
+    small = preset("scavenger_plus", cache_bytes=16 * 1024)
+    db = ShardedKVStore(small, n_shards=8, device=BlockDevice())
+    got = [s.opts.cache_bytes for s in db.shards]
+    assert sum(got) == 16 * 1024, got
+    assert all(b < small.block_bytes for b in got[1:])
+
+
+def test_group_commit_log_replay_roundtrip():
+    """Unit: framed records round-trip through a segment, preserving
+    per-shard order and tags."""
+    device = BlockDevice()
+    log = GroupCommitLog(device)
+    recs = [(t, b"key%d" % i, 100 + i, 1, b"payload%d" % i)
+            for i, t in enumerate([0, 2, 1, 2, 0, 1, 1, 0])]
+    with log.group():
+        for t, k, seq, vt, pl in recs:
+            log.append(t, k, seq, vt, pl)
+    assert log.syncs == 1 and log.records == len(recs)
+    got = list(GroupCommitLog.replay(device, log.active_fid))
+    assert got == recs

@@ -5,10 +5,10 @@ import pytest
 
 pytest.importorskip("hypothesis")
 
-import hypothesis.strategies as st
-from hypothesis import HealthCheck, given, settings
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
 
-from repro.core import KVStore, preset
+from repro.core import KVStore, preset  # noqa: E402
 
 KEYS = st.integers(min_value=0, max_value=60)
 SIZES = st.sampled_from([16, 100, 600, 2048, 9000])

@@ -9,11 +9,10 @@ import os
 import subprocess
 import sys
 
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel.sharding import default_rules, spec_for
+from repro.parallel.sharding import spec_for
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

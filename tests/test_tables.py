@@ -52,7 +52,6 @@ def test_dtable_index_probe_avoids_data_blocks():
     fid, _ = w.finish()
     cache = BlockCache(1 << 20)
     r = KTableReader(dev, fid, cache, IOClass.GC_LOOKUP)
-    before = dev.stats.by_class[IOClass.GC_LOOKUP].ops
     e = r.get_index_entry(b"key000000", IOClass.GC_LOOKUP)
     assert e is not None and e[2] == VT_INDEX_KF
     # a small-KV key: the index probe must return None without touching
