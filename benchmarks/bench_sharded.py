@@ -1,4 +1,5 @@
-"""Sharded front-end sweep: shard count vs throughput and space amp.
+"""Sharded front-end sweeps: shard count vs throughput/space amp, the
+scan-heavy YCSB-E mix, and the online-rebalancing acceptance run.
 
 M logical clients (tenants) drive a multi-tenant YCSB-A mix through the
 shard router with batched ops (write_batch / multi_get); the shards share
@@ -12,7 +13,15 @@ phase: ≈1.0 with per-op commits, ≈1/BATCH (+ε for memtable-rotation
 syncs) under the cross-shard group commit.  ``wal/op`` is the same for
 the mixed YCSB-A phase, where interleaved reads cut write batches short
 (read-your-writes ordering), so it sits between 1/BATCH and the
-read/write ratio.
+read/write ratio.  ``scanE`` is μs/op for a YCSB-E phase (95 % scans)
+over the cross-shard merging scan.
+
+``run_rebalance`` (the ``rebalance`` suite) drives a skewed two-tenant
+workload twice — balancer off, balancer on — and reports the max/mean
+per-shard live-bytes ratio each way plus the slots the balancer moved;
+it also measures YCSB-E with a migration in flight (dual-routed reads +
+provenance-filtered scan) and checks a mid-migration crash recovers with
+zero lost or duplicated keys.
 
 Env (see common.py): REPRO_BENCH_MB, REPRO_BENCH_SYSTEMS, REPRO_BENCH_FAST
   REPRO_BENCH_SHARDS   comma list of shard counts (default 1,2,4,8)
@@ -21,11 +30,13 @@ Env (see common.py): REPRO_BENCH_MB, REPRO_BENCH_SYSTEMS, REPRO_BENCH_FAST
 
 from __future__ import annotations
 
+import dataclasses
 import os
 
 from .common import SHORT, fast, dataset_mb, systems
-from repro.bench import (WorkloadSpec, gen_multi_client, make_db, run_phase,
-                         space_amplification)
+from repro.bench import (WorkloadSpec, gen_multi_client, gen_update,
+                         make_db, run_phase, space_amplification)
+from repro.bench.workloads import _prefix_ops, interleave_round_robin
 
 BATCH = 32
 
@@ -45,6 +56,7 @@ def run() -> list:
                         dataset_bytes=ds // n_clients,
                         update_bytes=3 * ds // n_clients)
     n_ops = 500 if fast() else max(1000, int(1.5 * spec.n_keys))
+    n_scans = 60 if fast() else 200
     rows = []
     for system in systems():
         for n in shard_counts():
@@ -56,8 +68,13 @@ def run() -> list:
                           gen_multi_client(spec, n_clients, "ycsb-a",
                                            n_ops=n_ops),
                           drain=True, batch=BATCH)
+            e = run_phase(db, "ycsb-e",
+                          gen_multi_client(spec, n_clients, "ycsb-e",
+                                           n_ops=n_scans),
+                          drain=True, batch=BATCH)
             s = db.stats()
             us = 1e6 * r.sim_seconds / max(1, r.ops)
+            us_e = 1e6 * e.sim_seconds / max(1, e.ops)
             rows.append(
                 f"sharded/{SHORT[system]}/s{n},{us:.2f},"
                 f"kops={r.kops_per_s:.2f} "
@@ -66,5 +83,142 @@ def run() -> list:
                 f"gc={s['counters']['gc_runs']:.0f} "
                 f"flushes={s['counters']['flushes']:.0f} "
                 f"walL/op={ld.wal_syncs_per_op:.4f} "
-                f"wal/op={r.wal_syncs_per_op:.4f}")
+                f"wal/op={r.wal_syncs_per_op:.4f} "
+                f"scanE={us_e:.2f}us")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Online rebalancing acceptance sweep (suite: rebalance)
+# ---------------------------------------------------------------------------
+
+def _gen_hot(n_keys: int, vbytes: int, rounds: int):
+    """The hot tenant: a handful of huge-value keys updated round-robin —
+    their live bytes and write traffic both concentrate in the few slots
+    those keys hash to, overloading whichever shards own them."""
+    for r in range(rounds):
+        for i in range(n_keys):
+            yield ("put", b"hot%04d" % i, bytes([32 + (r + i) % 64]) * vbytes)
+
+
+def _skewed_ops(hot_ops, cold_spec: WorkloadSpec):
+    """Two-tenant interleave: tenant 0 hammers the hot keyspace, tenant 1
+    writes a broad light background stream (the balanced baseline)."""
+    return interleave_round_robin([
+        _prefix_ops(hot_ops, 0),
+        _prefix_ops(gen_update(cold_spec), 1),
+    ])
+
+
+def _live_ratio(db) -> float:
+    """max/mean per-shard live bytes (value-store live + index)."""
+    per = db.space_usage()["per_shard"]
+    loads = [p["value_live_bytes"] + p["index_bytes"] for p in per]
+    mean = sum(loads) / len(loads)
+    return max(loads) / mean if mean > 0 else 1.0
+
+
+def run_rebalance() -> list:
+    n = 4
+    ds = dataset_mb() << 20
+    if fast():
+        ds = min(ds, 2 << 20)
+    # Hot tenant: ~10 huge-value keys concentrated in a few slots; cold
+    # tenant: broad light traffic that spreads evenly.
+    hot_keys = 10
+    hot_vbytes = max(64 << 10, ds // 16)
+    hot_rounds = 6
+    cold_spec = WorkloadSpec(value_kind="fixed-1024",
+                             dataset_bytes=ds // 2,
+                             update_bytes=ds // 4, seed=303)
+    scale_spec = WorkloadSpec(value_kind="mixed-8k", dataset_bytes=ds,
+                              update_bytes=0)
+    n_scans = 60 if fast() else 200
+    rows = []
+    for system in systems():
+        ratios = {}
+        moved = 0
+        for enabled in (False, True):
+            db = make_db(system, scale_spec, n_shards=n, num_slots=64,
+                         rebalance=enabled, rebalance_threshold=1.2,
+                         rebalance_min_bytes=min(256 << 10, ds // 8))
+            run_phase(db, "skew",
+                      _skewed_ops(_gen_hot(hot_keys, hot_vbytes,
+                                           hot_rounds), cold_spec),
+                      drain=True, batch=BATCH)
+            # settle: let any in-flight/migration-triggered work finish,
+            # then churn BOTH tenants so every shard keeps flushing — the
+            # source's post-cleanup tombstones only turn into exposed
+            # garbage (and reclaimed live bytes) once its own compactions
+            # drop the shadowed entries
+            db.rebalancer.maybe_rebalance()
+            db.drain()
+            churn_cold = dataclasses.replace(
+                cold_spec, update_bytes=ds, seed=11)
+            run_phase(db, "churn",
+                      _skewed_ops(_gen_hot(hot_keys, hot_vbytes, 2),
+                                  churn_cold),
+                      drain=True, batch=BATCH)
+            db.flush_all()
+            ratios[enabled] = _live_ratio(db)
+            if enabled:
+                moved = db.stats()["rebalance"]["slots_moved"]
+        rows.append(
+            f"rebalance/{SHORT[system]}/s{n},0.00,"
+            f"ratio_off={ratios[False]:.3f} ratio_on={ratios[True]:.3f} "
+            f"slots_moved={moved} "
+            f"improved={int(ratios[True] < ratios[False])}")
+
+        # Scan-heavy YCSB-E with a migration in flight: the dual-routed
+        # merging scan pays the provenance filter + duplicate shard reads.
+        db = make_db(system, scale_spec, n_shards=n, num_slots=64)
+        espec = WorkloadSpec(value_kind="mixed-8k", dataset_bytes=ds // 4,
+                             update_bytes=0)
+        run_phase(db, "load", gen_multi_client(espec, 2, "load"),
+                  drain=True, batch=BATCH)
+        base = run_phase(db, "ycsb-e",
+                         gen_multi_client(espec, 2, "ycsb-e",
+                                          n_ops=n_scans),
+                         drain=True, batch=BATCH)
+        slot = next(s for s, o in enumerate(db.slot_map) if o == 0)
+        db.rebalancer.start_migration(slot, 1)
+        mig = run_phase(db, "ycsb-e+mig",
+                        gen_multi_client(espec, 2, "ycsb-e",
+                                         n_ops=n_scans),
+                        batch=BATCH)
+        db.drain()
+        us_base = 1e6 * base.sim_seconds / max(1, base.ops)
+        us_mig = 1e6 * mig.sim_seconds / max(1, mig.ops)
+        rows.append(
+            f"rebalance/{SHORT[system]}/ycsbE,{us_base:.2f},"
+            f"mig={us_mig:.2f}us "
+            f"overhead={us_mig / max(us_base, 1e-9):.2f}x "
+            f"epoch={db.epoch}")
+
+        # Mid-migration crash: copies are durable, the epoch commit never
+        # ran — recovery must land pre-commit with no lost/duplicate keys.
+        from repro.core import ShardedKVStore, preset
+        from repro.store.device import BlockDevice
+
+        device = BlockDevice()
+        cdb = ShardedKVStore(preset(system, num_slots=64), n_shards=n,
+                             device=device)
+        kv = {}
+        for i in range(400):
+            k = b"crash%05d" % i
+            v = bytes([i % 251]) * 1200
+            cdb.put(k, v)
+            kv[k] = v
+        slot = next(s for s, o in enumerate(cdb.slot_map) if o == 0)
+        cdb.rebalancer.start_migration(slot, 1)     # crash before commit
+        rdb = ShardedKVStore(preset(system, num_slots=64), device=device,
+                             recover=True)
+        lost = sum(1 for k, v in kv.items() if rdb.get(k) != v)
+        got = rdb.scan(b"", len(kv) + 100)
+        dup = len(got) - len({k for k, _ in got})
+        lost += int(got != sorted(kv.items()))
+        rows.append(
+            f"rebalance/{SHORT[system]}/crash,0.00,"
+            f"lost={lost} dup={dup} epoch={rdb.epoch} "
+            f"ok={int(lost == 0 and dup == 0 and rdb.epoch == 0)}")
     return rows

@@ -20,6 +20,8 @@ Suites:
   ycsb           Fig. 17/18    (YCSB A-F)
   features       Fig. 19/20    (ablation ladder)
   sharded        sharded front-end: shard count vs throughput/space amp
+  rebalance      online shard rebalancing: skewed-tenant balance, scan
+                 under migration, mid-migration crash recovery
   kernels        Pallas kernel micro-costs (interpret mode)
   roofline       dry-run roofline terms (reads dryrun JSON artifacts)
 """
@@ -49,6 +51,7 @@ def main() -> None:
         "ycsb": bench_ycsb.run,
         "features": bench_features.run,
         "sharded": bench_sharded.run,
+        "rebalance": bench_sharded.run_rebalance,
     }
     try:
         from . import bench_kernels

@@ -57,3 +57,26 @@ w = sdb2.stats()["wal"]
 print(f"group commit: {w['records']} records in {w['syncs']} wal_syncs "
       f"({w['records'] / w['syncs']:.0f} records/sync)")
 assert w["syncs"] < w["records"] / 16
+
+# Solo stores batch too: KVStore.write_batch opens a commit group on its
+# private WAL, so a standalone store amortizes syncs the same way.
+db2 = KVStore(preset("scavenger_plus"))
+db2.write_batch([("put", b"s%05d" % i, b"v" * 1024) for i in range(64)])
+w = db2.stats()["wal"]
+print(f"solo group commit: {w['records']} records in {w['syncs']} syncs")
+
+# Online shard rebalancing: keys hash into fixed slots, slots map to
+# shards, and a JOB_MIGRATE job (scheduled like GC, throttled by the
+# same bandwidth governor) moves one slot at a time — routing re-points
+# in a single epoch commit, and the balancer proposes moves itself when
+# per-shard live-byte load diverges (opts.rebalance=True).
+rdb = ShardedKVStore(preset("scavenger_plus", num_slots=64), n_shards=2)
+for i in range(256):
+    rdb.put(b"r%05d" % i, b"v" * 2048)
+slot = next(s for s, owner in enumerate(rdb.slot_map) if owner == 0)
+rdb.rebalancer.start_migration(slot, 1)      # move slot: shard 0 -> 1
+rdb.drain()                                  # epoch commit rides the job
+reb = rdb.stats()["rebalance"]
+assert rdb.slot_map[slot] == 1 and reb["epoch"] == 1
+print(f"rebalance: epoch={reb['epoch']} slots_moved={reb['slots_moved']} "
+      f"keys_moved={reb['keys_moved']} bytes_moved={reb['bytes_moved']}")

@@ -51,14 +51,21 @@ class MemtableLog:
 
 
 class SoloCommitSink:
-    """Today's standalone-store WAL semantics behind the sink interface:
-    one file per memtable, one device append per record."""
+    """Standalone-store WAL semantics behind the sink interface: one file
+    per memtable, one device append (≈ one sync) per record — plus a
+    *private* commit group for ``KVStore.write_batch``: inside a
+    :meth:`group` frame, encoded records queue and the leader drains them
+    with one coalesced append on exit, so a solo store amortizes WAL syncs
+    the same way the shards of a sharded store do."""
 
     def __init__(self, device: BlockDevice, core=None) -> None:
         self.device = device
         self.core = core                     # SchedulerCore (sync accounting)
         self.on_open: Optional[Callable[[int], None]] = None
         self._wal: Optional[WAL] = None
+        self._pending: List[bytes] = []      # encoded records awaiting sync
+        self._pending_records = 0
+        self._group_depth = 0
 
     def start(self) -> None:
         self._open()
@@ -68,8 +75,28 @@ class SoloCommitSink:
         if self.on_open is not None:
             self.on_open(self._wal.fid)
 
+    @contextmanager
+    def group(self):
+        """Open a commit group.  Nested frames are followers — only the
+        outermost (the leader) drains the queue with one device sync."""
+        self._group_depth += 1
+        try:
+            yield self
+        finally:
+            self._group_depth -= 1
+            if self._group_depth == 0:
+                self.sync()
+
     def append(self, ukey: bytes, seq: int, vtype: int, payload: bytes,
                cls: IOClass = IOClass.WAL) -> None:
+        if self._group_depth > 0 and cls == IOClass.WAL:
+            self._pending.append(encode_wal_record(ukey, seq, vtype,
+                                                   payload))
+            self._pending_records += 1
+            return
+        # Out-of-band class (Titan GC write-back) or no group open: flush
+        # the queue first so file byte order equals sequence order.
+        self.sync()
         nbytes = self._wal.append(ukey, seq, vtype, payload, cls)
         # Only foreground WAL commits count as syncs; out-of-band classes
         # (Titan GC write-back) are charged to their own I/O class and
@@ -77,7 +104,19 @@ class SoloCommitSink:
         if self.core is not None and cls == IOClass.WAL:
             self.core.note_wal_sync(nbytes, 1)
 
+    def sync(self) -> None:
+        """Drain the pending queue with one coalesced device append."""
+        if not self._pending:
+            return
+        buf = b"".join(self._pending)
+        n = self._pending_records
+        self._pending, self._pending_records = [], 0
+        self.device.append(self._wal.fid, buf, IOClass.WAL)
+        if self.core is not None:
+            self.core.note_wal_sync(len(buf), n)
+
     def rotate(self) -> MemtableLog:
+        self.sync()          # pending records belong to the old file
         handle = MemtableLog([self._wal.fid])
         self._open()
         return handle
@@ -234,6 +273,12 @@ class SharedCommitSink:
 
     def start(self) -> None:
         pass                    # segments are claimed lazily, on first write
+
+    def group(self):
+        """The shard-level view of a commit group (delegates to the shared
+        log), so ``KVStore.write_batch`` amortizes syncs whether the store
+        is standalone or a shard of a sharded front-end."""
+        return self.log.group()
 
     def append(self, ukey: bytes, seq: int, vtype: int, payload: bytes,
                cls: IOClass = IOClass.WAL) -> None:

@@ -38,6 +38,24 @@ GC_STEP_CLASSES = (IOClass.GC_READ, IOClass.GC_LOOKUP, IOClass.GC_WRITE,
                    IOClass.GC_WRITE_INDEX)
 
 
+def validate_batch_ops(ops) -> list:
+    """Materialize and validate a write_batch op list *before* any commit
+    group opens: a malformed op — wrong kind, wrong arity, or a
+    non-bytes key/value that would blow up inside the WAL encoder —
+    rejects the whole batch with nothing queued, applied, or accounted
+    (shared by KVStore and ShardedKVStore)."""
+    ops = list(ops)
+    for op in ops:
+        if not isinstance(op, (tuple, list)) or not op \
+                or op[0] not in ("put", "del") \
+                or len(op) != (3 if op[0] == "put" else 2) \
+                or not isinstance(op[1], (bytes, bytearray)) \
+                or (op[0] == "put"
+                    and not isinstance(op[2], (bytes, bytearray))):
+            raise ValueError(f"bad batch op {op!r}")
+    return ops
+
+
 class KVStore:
     def __init__(self, opts: Options, device: Optional[BlockDevice] = None,
                  recover: bool = False,
@@ -120,6 +138,27 @@ class KVStore:
     def delete(self, ukey: bytes) -> None:
         self._write(ukey, VT_DELETE, b"")
         self.stats_counters["deletes"] += 1
+
+    def write_batch(self, ops) -> None:
+        """Apply ('put', k, v) / ('del', k) ops under one commit group on
+        the store's private sink: records queue and the group leader
+        drains them with a single coalesced WAL append — one sync per
+        batch instead of one per record, the solo-store counterpart of the
+        sharded cross-shard group commit (visible in ``stats()["wal"]``).
+
+        Ops are validated *before* the group opens so a malformed batch
+        is rejected whole, with nothing queued or applied."""
+        ops = validate_batch_ops(ops)
+        with self.sink.group():
+            for op in ops:
+                if op[0] == "put":
+                    self.put(op[1], op[2])
+                else:
+                    self.delete(op[1])
+
+    def multi_get(self, keys) -> List[Optional[bytes]]:
+        """Point-read a batch of keys; results align with ``keys``."""
+        return [self.get(k) for k in keys]
 
     def _note_wal_open(self, fid: int) -> None:
         """The active memtable gained a dependency on log file ``fid`` —
@@ -256,10 +295,20 @@ class KVStore:
         return None
 
     def get(self, ukey: bytes) -> Optional[bytes]:
+        return self.get_present(ukey)[1]
+
+    def get_present(self, ukey: bytes) -> Tuple[bool, Optional[bytes]]:
+        """Point read that distinguishes *no entry anywhere* ``(False,
+        None)`` from a present entry ``(True, value)`` — a tombstone is
+        present with value ``None``.  The sharded front-end uses the
+        presence bit to dual-route reads during a slot migration (a
+        source tombstone must win over a stale copy on the target)."""
         self.sched.pump()
         self.stats_counters["gets"] += 1
         e = self.get_entry(ukey, IOClass.USER_READ)
-        return self._resolve_value(e, IOClass.USER_READ)
+        if e is None:
+            return False, None
+        return True, self._resolve_value(e, IOClass.USER_READ)
 
     def _resolve_value(self, e: Optional[Entry], cls: IOClass
                        ) -> Optional[bytes]:
@@ -288,11 +337,15 @@ class KVStore:
                 return val
         return None
 
-    def scan(self, start: bytes, count: int) -> List[Tuple[bytes, bytes]]:
-        """Range scan: merged iteration over memtables and all levels,
-        resolving separated values through the value store."""
-        self.sched.pump()
-        self.stats_counters["scans"] += 1
+    def entry_streams(self, start: bytes,
+                      cls: IOClass = IOClass.USER_READ
+                      ) -> List[Iterator[Entry]]:
+        """The store's merged-iteration sources from ``start``: active +
+        immutable memtables, each L0 file, and one chained stream per
+        deeper level — every stream sorted by (key asc, seq desc).
+        Shared by the user scan and the migration slot copy (which reads
+        with the GC I/O class), so level-iteration semantics cannot
+        diverge between the two."""
         streams: List[Iterator[Entry]] = []
 
         def mem_stream(m: Memtable) -> Iterator[Entry]:
@@ -305,19 +358,34 @@ class KVStore:
             streams.append(mem_stream(m))
         for f in self.versions.levels[0]:
             if f.largest >= start:
-                streams.append(self.reader(f.fid, IOClass.USER_READ)
-                               .iter_from(start, IOClass.USER_READ))
+                streams.append(self.reader(f.fid, cls)
+                               .iter_from(start, cls))
         for level in range(1, self.versions.num_levels):
             files = [f for f in self.versions.levels[level]
                      if f.largest >= start]
             if files:
-                streams.append(self._level_stream(files, start))
+                streams.append(self._level_stream(files, start, cls))
+        return streams
+
+    def scan(self, start: bytes, count: int,
+             accept: Optional[Callable[[bytes], bool]] = None
+             ) -> List[Tuple[bytes, bytes]]:
+        """Range scan: merged iteration over memtables and all levels,
+        resolving separated values through the value store.  ``accept``
+        filters *keys* before their value is resolved — the sharded
+        front-end passes a routing filter here so migration copies and
+        orphans neither cost value reads nor consume the budget."""
+        self.sched.pump()
+        self.stats_counters["scans"] += 1
         out: List[Tuple[bytes, bytes]] = []
         prev: Optional[bytes] = None
-        for e in _heapq.merge(*streams, key=lambda e: (e[0], -e[1])):
+        for e in _heapq.merge(*self.entry_streams(start, IOClass.USER_READ),
+                              key=lambda e: (e[0], -e[1])):
             if e[0] == prev:
                 continue
             prev = e[0]
+            if accept is not None and not accept(e[0]):
+                continue
             val = self._resolve_value(e, IOClass.USER_READ)
             if val is None:
                 continue
@@ -326,11 +394,10 @@ class KVStore:
                 break
         return out
 
-    def _level_stream(self, files: List[FileMeta], start: bytes
-                      ) -> Iterator[Entry]:
+    def _level_stream(self, files: List[FileMeta], start: bytes,
+                      cls: IOClass = IOClass.USER_READ) -> Iterator[Entry]:
         for f in files:
-            yield from self.reader(f.fid, IOClass.USER_READ) \
-                .iter_from(start, IOClass.USER_READ)
+            yield from self.reader(f.fid, cls).iter_from(start, cls)
 
     # ==================================================================
     # Table/reader plumbing

@@ -57,6 +57,12 @@ class Options:
     dynamic_scheduler: bool = False   # S-AD   (paper III-D)
     dropcache_entries: int = 4096
 
+    # --- sharded front-end: slot routing + online rebalancing ------------
+    num_slots: int = 256              # fixed routing slots (keys hash here)
+    rebalance: bool = False           # enable the online slot balancer
+    rebalance_threshold: float = 1.5  # trigger when max load > thr * mean
+    rebalance_min_bytes: int = 256 * 1024  # ignore divergence below this
+
     # --- scheduling ------------------------------------------------------
     n_threads: int = 8                # background lanes (paper: 16)
     flush_lanes: int = 2
@@ -71,6 +77,8 @@ class Options:
         assert self.vsst_format in ("log", "btable", "rtable")
         assert self.ksst_format in ("btable", "dtable")
         assert self.gc_mode in ("standalone", "compaction")
+        assert self.num_slots >= 1
+        assert self.rebalance_threshold > 1.0
         if self.index_kind == "ka":
             assert self.vsst_format == "log", "KA addressing implies log vSSTs"
         return self

@@ -35,6 +35,7 @@ from ..store.device import BlockDevice, Clock, RateLimiter
 JOB_FLUSH = "flush"
 JOB_COMPACTION = "compaction"
 JOB_GC = "gc"
+JOB_MIGRATE = "migrate"          # slot migration (online shard rebalancing)
 
 
 class JobClock:
@@ -98,7 +99,8 @@ class SchedulerCore:
         self.bg_lanes = Lanes(opts.n_threads)
         self.events: List[Tuple[float, int, Callable[[], None]]] = []
         self.counter = itertools.count()
-        self.active = {JOB_FLUSH: 0, JOB_COMPACTION: 0, JOB_GC: 0}
+        self.active = {JOB_FLUSH: 0, JOB_COMPACTION: 0, JOB_GC: 0,
+                       JOB_MIGRATE: 0}
         self.max_gc = max(1, opts.n_threads // 2)   # TerarkDB static default
         # bandwidth governor state (paper III-D.2)
         self.gc_write_limiter = RateLimiter(clock, device.cost.write_bw)
@@ -167,9 +169,14 @@ class SchedulerCore:
     def can_admit(self, kind: str) -> bool:
         if kind == JOB_FLUSH:
             return self.active[JOB_FLUSH] < self.opts.flush_lanes
-        total = self.active[JOB_COMPACTION] + self.active[JOB_GC]
+        total = self.active[JOB_COMPACTION] + self.active[JOB_GC] \
+            + self.active[JOB_MIGRATE]
         if total >= self.opts.n_threads:
             return False
+        if kind == JOB_MIGRATE:
+            # Migrations move one slot at a time and compete with
+            # compaction/GC for the shared background lanes.
+            return self.active[JOB_MIGRATE] < 1
         if kind == JOB_GC:
             return self.active[JOB_GC] < self.max_gc
         return self.active[JOB_COMPACTION] < self.opts.n_threads - \

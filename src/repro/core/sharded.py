@@ -4,26 +4,37 @@ Real KV-separated deployments (Titan/TerarkDB as evaluated in the paper)
 run many column-family/shard instances over a single SSD and a single
 background-thread pool.  ``ShardedKVStore`` reproduces that topology:
 
-* user keys are hash-partitioned across N :class:`KVStore` shards
-  (deterministic CRC32 routing, stable across processes and restarts);
+* user keys hash into ``Options.num_slots`` fixed *slots* (deterministic
+  CRC32, stable across processes and restarts); a **slot map** (slot →
+  shard) does the final routing hop, so shard membership can change
+  online — the :mod:`.rebalance` subsystem migrates one slot at a time
+  and re-points it with an epoch commit, no world rehash;
 * all shards share one :class:`BlockDevice`, one simulated clock and one
-  :class:`SchedulerCore` — flush/compaction/GC admission, the dynamic GC
-  thread allocation (eqs. 4-6 over *summed* shard pressures) and the GC
-  bandwidth governor are arbitrated globally, so a GC-heavy shard competes
-  with its neighbours for lanes exactly as column families compete for
-  RocksDB ``Env`` threads;
+  :class:`SchedulerCore` — flush/compaction/GC/migration admission, the
+  dynamic GC thread allocation (eqs. 4-6 over *summed* shard pressures)
+  and the GC bandwidth governor are arbitrated globally, so a GC-heavy
+  shard competes with its neighbours for lanes exactly as column families
+  compete for RocksDB ``Env`` threads;
 * batched APIs (``write_batch`` / ``multi_get`` / merged ``scan``) route
   per shard, preserving per-key ordering (a key always hashes to the same
-  shard);
+  slot); reads dual-route source-then-target for slots with an in-flight
+  migration, and the merged scan filters every candidate by the shard its
+  key *currently* routes to, so migration copies and pre-cleanup orphans
+  never surface twice;
 * all shards commit through one :class:`~.commitlog.GroupCommitLog`:
   a ``write_batch`` opens a commit group so the whole cross-shard batch
   is coalesced into a single framed segment append — **one** WAL sync per
   batch instead of one per record (records carry a shard tag; per-shard
   sequence stamping is preserved);
-* a *superblock* — always fid 1, the first file created — records the
-  shard count and each shard's manifest fid so ``recover=True`` can replay
-  every shard's manifest, then route the interleaved commit-log segments
-  back to their shards by tag (torn tails tolerated).
+* a *superblock* — always fid 1, the first file created — is an
+  append-only frame log.  The base frame records the shard count, slot
+  count, initial slot map and each shard's manifest fid; every completed
+  migration appends one ``{epoch, slot_map, move}`` frame (the atomic
+  epoch commit) and one ``{cleaned}`` frame once the source copies are
+  tombstoned.  ``recover=True`` replays the frames (v1 superblocks from
+  the fixed-routing era decode to the default slot map), then each
+  shard's manifest, then routes the interleaved commit-log segments back
+  to their shards by tag (torn tails tolerated everywhere).
 
 Per-shard memtables follow RocksDB column-family semantics (each shard
 owns one); the block-cache budget is divided across shards with the
@@ -35,25 +46,33 @@ from __future__ import annotations
 
 import dataclasses
 import heapq as _heapq
-import zlib
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from contextlib import contextmanager
+from typing import (Callable, Dict, Iterable, List, Optional,
+                    Sequence, Tuple)
 
 import msgpack
 
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
 from .commitlog import GroupCommitLog
-from .db import KVStore
+from .db import KVStore, validate_batch_ops
 from .options import Options
-from .scheduler import SchedulerCore
+from .rebalance import (DEFAULT_SLOTS, Rebalancer, default_slot_map, slot_of)
+from .scheduler import Scheduler, SchedulerCore
 
 SUPERBLOCK_FID = 1
 
 WriteOp = Tuple  # ('put', key, value) | ('del', key)
 
+#: How many routed ops between balancer policy checks (the other trigger
+#: is the scheduler-core waiter, fired on every background-job completion).
+REBALANCE_TICK_OPS = 128
+
 
 def shard_of(ukey: bytes, n_shards: int) -> int:
-    """Deterministic hash routing (CRC32, unsalted — stable across runs)."""
-    return zlib.crc32(ukey) % n_shards
+    """Legacy helper: routing under the *default* slot map (slot → slot %
+    n).  Deterministic and stable; equals the pre-slot ``crc32 % n``
+    routing whenever ``n_shards`` divides ``DEFAULT_SLOTS``."""
+    return slot_of(ukey, DEFAULT_SLOTS) % n_shards
 
 
 class ShardedKVStore:
@@ -64,12 +83,22 @@ class ShardedKVStore:
         self.device = device or BlockDevice(Clock(), CostModel())
         self.clock = self.device.clock
         self.sched_core = SchedulerCore(self.clock, self.device, opts)
+        # Front-end view over the shared core: migration jobs run here.
+        self.sched = Scheduler(self.clock, self.device, opts,
+                               core=self.sched_core)
         self.shards: List[KVStore] = []
         self._on_user_write: Optional[Callable[[bytes, int, bytes], None]] \
             = None
+        self._ops_since_rebalance = 0
+        self._route_locks = 0
+        pending_cleanup: Optional[Tuple[int, int, int]] = None
         if recover:
             sb = self._read_superblock()
             n_shards = sb["n_shards"]
+            self.n_slots = sb["n_slots"]
+            self.slot_map = list(sb["slot_map"])
+            self.epoch = sb["epoch"]
+            pending_cleanup = sb["pending_cleanup"]
             self.commitlog = GroupCommitLog(self.device,
                                             core=self.sched_core)
             budgets = self._shard_cache_budgets(n_shards)
@@ -88,20 +117,33 @@ class ShardedKVStore:
                     f"(first fid is {fid}, expected {SUPERBLOCK_FID})")
             self.commitlog = GroupCommitLog(self.device,
                                             core=self.sched_core)
+            self.n_slots = opts.num_slots
+            self.slot_map = default_slot_map(n_shards, self.n_slots)
+            self.epoch = 0
             budgets = self._shard_cache_budgets(n_shards)
             for tag in range(n_shards):
                 self.shards.append(
                     KVStore(self._shard_opts(budgets[tag]),
                             device=self.device, sched_core=self.sched_core,
                             commit_log=self.commitlog, shard_tag=tag))
-            blob = msgpack.packb(
-                {"n_shards": n_shards,
-                 "manifests": [s.versions.manifest_fid for s in self.shards]},
-                use_bin_type=True)
-            self.device.append(SUPERBLOCK_FID,
-                               len(blob).to_bytes(4, "little") + blob,
-                               IOClass.MANIFEST)
+            self._append_superblock(
+                {"version": 2, "epoch": 0, "n_shards": n_shards,
+                 "n_slots": self.n_slots, "slot_map": self.slot_map,
+                 "manifests": [s.versions.manifest_fid
+                               for s in self.shards]})
         self.n_shards = n_shards
+        self.rebalancer = Rebalancer(self)
+        if pending_cleanup is not None:
+            # A move committed but crashed before tombstoning the source
+            # copies — finish the cleanup now (idempotent).
+            slot, src_id, _dst = pending_cleanup
+            self.rebalancer.resume_cleanup(slot, src_id)
+        if recover:
+            # Migration intents with no matching commit: the crashed job
+            # may have left orphan copies on its target — sweep them.
+            for slot, _src, dst in sb["pending_intents"]:
+                self.rebalancer.clear_aborted(slot, dst)
+        self.sched_core.add_waiter(self.rebalancer.maybe_rebalance)
 
     def _shard_cache_budgets(self, n_shards: int) -> List[int]:
         """One cache budget for the whole device, split across shards.
@@ -160,6 +202,20 @@ class ShardedKVStore:
                 self.device.delete(fid)
         self.device.charge_time = True
 
+    # ==================================================================
+    # Superblock (append-only frame log, versioned decode)
+    # ==================================================================
+
+    def _append_superblock(self, record: dict) -> None:
+        """Append one length-prefixed frame.  Each frame is one device
+        append — atomic under the torn-tail discipline (a partial frame is
+        discarded by replay), which is what makes the epoch commit a
+        single atomic re-point of a slot."""
+        blob = msgpack.packb(record, use_bin_type=True)
+        self.device.append(SUPERBLOCK_FID,
+                           len(blob).to_bytes(4, "little") + blob,
+                           IOClass.MANIFEST)
+
     def _read_superblock(self) -> dict:
         if not self.device.exists(SUPERBLOCK_FID):
             raise RuntimeError("no superblock — device was never "
@@ -167,31 +223,149 @@ class ShardedKVStore:
         self.device.charge_time = False
         buf = self.device.read_all(SUPERBLOCK_FID, IOClass.MANIFEST)
         self.device.charge_time = True
-        ln = int.from_bytes(buf[:4], "little")
-        return msgpack.unpackb(buf[4:4 + ln], raw=False)
+        frames: List[dict] = []
+        pos = 0
+        while pos + 4 <= len(buf):
+            ln = int.from_bytes(buf[pos:pos + 4], "little")
+            pos += 4
+            if pos + ln > len(buf):
+                break                       # torn tail (mid-commit crash)
+            frames.append(msgpack.unpackb(buf[pos:pos + ln], raw=False))
+            pos += ln
+        if not frames:
+            raise RuntimeError("empty superblock")
+        base = frames[0]
+        n_shards = base["n_shards"]
+        if "version" not in base:
+            # v1 superblock (fixed crc32 % n routing era).  The default
+            # slot map reproduces that placement only when n_shards
+            # divides the slot count — refuse a silent misroute otherwise.
+            if DEFAULT_SLOTS % n_shards != 0:
+                raise RuntimeError(
+                    f"cannot upgrade a v1 superblock with "
+                    f"n_shards={n_shards}: slot routing matches the legacy "
+                    f"crc32 % n placement only when n_shards divides "
+                    f"{DEFAULT_SLOTS}")
+            sb = {"n_shards": n_shards, "manifests": base["manifests"],
+                  "n_slots": DEFAULT_SLOTS, "epoch": 0,
+                  "slot_map": default_slot_map(n_shards, DEFAULT_SLOTS)}
+        else:
+            sb = {"n_shards": n_shards, "manifests": base["manifests"],
+                  "n_slots": base["n_slots"], "epoch": base["epoch"],
+                  "slot_map": list(base["slot_map"])}
+        last_move: Optional[Tuple[int, Tuple[int, int, int]]] = None
+        cleaned = -1
+        intents: List[Tuple[int, int, int]] = []   # (slot, src, dst)
+
+        def _drop_intent(slot: int, dst: int) -> None:
+            for i, it in enumerate(intents):
+                if it[0] == slot and it[2] == dst:
+                    del intents[i]
+                    return
+
+        for fr in frames[1:]:
+            if "mig_start" in fr:
+                intents.append(tuple(fr["mig_start"]))
+            if "mig_abort" in fr:
+                _drop_intent(fr["mig_abort"][0], fr["mig_abort"][1])
+            if "slot_map" in fr:
+                sb["slot_map"] = list(fr["slot_map"])
+                sb["epoch"] = fr["epoch"]
+                if "move" in fr:
+                    last_move = (fr["epoch"], tuple(fr["move"]))
+                    _drop_intent(fr["move"][0], fr["move"][2])
+            if "cleaned" in fr:
+                cleaned = max(cleaned, fr["cleaned"])
+        sb["pending_cleanup"] = (last_move[1]
+                                 if last_move is not None
+                                 and last_move[0] > cleaned else None)
+        sb["pending_intents"] = intents
+        return sb
 
     # ==================================================================
     # Routing
     # ==================================================================
 
+    @contextmanager
+    def _route_guard(self):
+        """Hold the slot map still for the duration of one front-end op.
+
+        Every op routes first and then executes through its shard, whose
+        write/read path pumps the event heap — where a migration's epoch
+        commit may be due.  Committing there would flip routing *between*
+        the route decision and the record landing (the record would land
+        on the former owner after the catch-up scan already ran: a silent
+        lost write), or re-point slots halfway through a multi-shard
+        scan.  While the guard is held, commits park on the rebalancer's
+        deferred list; the outermost guard exit runs them — at which
+        point the op's records are in the source memtable, so the commit
+        catch-up copies them like any other pre-commit write."""
+        self._route_locks += 1
+        try:
+            yield
+        finally:
+            self._route_locks -= 1
+            if self._route_locks == 0:
+                self.rebalancer.run_deferred()
+
+    def _slot(self, ukey: bytes) -> int:
+        return slot_of(ukey, self.n_slots)
+
     def shard_of(self, ukey: bytes) -> int:
-        return shard_of(ukey, self.n_shards)
+        return self.slot_map[slot_of(ukey, self.n_slots)]
 
     def shard_for(self, ukey: bytes) -> KVStore:
-        return self.shards[shard_of(ukey, self.n_shards)]
+        return self.shards[self.shard_of(ukey)]
+
+    def _tick_rebalance(self, n_ops: int = 1) -> None:
+        self._ops_since_rebalance += n_ops
+        if self._ops_since_rebalance >= REBALANCE_TICK_OPS:
+            self._ops_since_rebalance = 0
+            self.rebalancer.maybe_rebalance()
 
     # ==================================================================
     # Single-op API (same surface as KVStore)
     # ==================================================================
 
     def put(self, ukey: bytes, value: bytes) -> None:
-        self.shard_for(ukey).put(ukey, value)
+        with self._route_guard():
+            slot = self._slot(ukey)
+            self.rebalancer.note_put(slot, ukey, len(ukey) + len(value))
+            self.rebalancer.note_route_put(slot, ukey)
+            self.shards[self.slot_map[slot]].put(ukey, value)
+        self._tick_rebalance()
 
     def delete(self, ukey: bytes) -> None:
-        self.shard_for(ukey).delete(ukey)
+        with self._route_guard():
+            slot = self._slot(ukey)
+            self.rebalancer.note_delete(slot, ukey)
+            self.rebalancer.note_route_delete(slot, ukey)
+            self.shards[self.slot_map[slot]].delete(ukey)
+        self._tick_rebalance()
 
     def get(self, ukey: bytes) -> Optional[bytes]:
-        return self.shard_for(ukey).get(ukey)
+        with self._route_guard():
+            return self._get_routed(ukey, self.shard_of(ukey))
+
+    def _get_routed(self, ukey: bytes, sid: int) -> Optional[bytes]:
+        """Point read with migration dual-routing: while a slot's move is
+        in flight the *source* (current slot-map owner) stays
+        authoritative — writes still land there — so its entry (including
+        a tombstone) wins.  Only a key the source has never seen — and
+        that was not deleted in the migration window (a bottom-level
+        compaction can erase the tombstone without trace) — falls through
+        to the target."""
+        src = self.shards[sid]
+        slot = self._slot(ukey)
+        dst_id = self.rebalancer.inflight.get(slot)
+        if dst_id is None or dst_id == sid:
+            return src.get(ukey)
+        present, val = src.get_present(ukey)
+        if present:
+            return val
+        if self.rebalancer.is_window_deleted(slot, ukey):
+            return None
+        return self.shards[dst_id].get(ukey)
 
     # ==================================================================
     # Batched API
@@ -204,47 +378,81 @@ class ShardedKVStore:
         coalesced segment append — one device sync per batch instead of
         one per op.  Cross-shard reordering is safe — a key's ops stay on
         one shard in submission order — and grouping gives each shard one
-        contiguous run of log records (locality a real batch write has)."""
-        groups: List[List[WriteOp]] = [[] for _ in range(self.n_shards)]
-        for op in ops:
-            groups[shard_of(op[1], self.n_shards)].append(op)
-        with self.commitlog.group():
-            for shard, group in zip(self.shards, groups):
-                for op in group:
-                    if op[0] == "put":
-                        shard.put(op[1], op[2])
-                    elif op[0] == "del":
-                        shard.delete(op[1])
-                    else:
-                        raise ValueError(f"bad batch op {op[0]!r}")
+        contiguous run of log records (locality a real batch write has).
+
+        Ops are validated *before* the commit group opens: a malformed op
+        rejects the whole batch with no record queued or applied, instead
+        of failing mid-group with earlier records already committed."""
+        ops = validate_batch_ops(ops)
+        with self._route_guard():
+            groups: List[List[WriteOp]] = [[] for _ in range(self.n_shards)]
+            for op in ops:
+                slot = self._slot(op[1])
+                if op[0] == "put":
+                    self.rebalancer.note_put(slot, op[1],
+                                             len(op[1]) + len(op[2]))
+                    self.rebalancer.note_route_put(slot, op[1])
+                else:
+                    self.rebalancer.note_delete(slot, op[1])
+                    self.rebalancer.note_route_delete(slot, op[1])
+                groups[self.slot_map[slot]].append(op)
+            with self.commitlog.group():
+                for shard, group in zip(self.shards, groups):
+                    for op in group:
+                        if op[0] == "put":
+                            shard.put(op[1], op[2])
+                        else:
+                            shard.delete(op[1])
+        self._tick_rebalance(len(ops))
 
     def multi_get(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
         """Point-read a batch of keys; results align with ``keys``.
         Reads are grouped per shard so each shard serves its keys in one
         contiguous run (one event-pump per group, cache locality)."""
         out: List[Optional[bytes]] = [None] * len(keys)
-        groups: Dict[int, List[int]] = {}
-        for i, k in enumerate(keys):
-            groups.setdefault(shard_of(k, self.n_shards), []).append(i)
-        for sid, idxs in groups.items():
-            shard = self.shards[sid]
-            for i in idxs:
-                out[i] = shard.get(keys[i])
+        with self._route_guard():
+            groups: Dict[int, List[int]] = {}
+            for i, k in enumerate(keys):
+                groups.setdefault(self.shard_of(k), []).append(i)
+            for sid, idxs in groups.items():
+                for i in idxs:
+                    out[i] = self._get_routed(keys[i], sid)
         return out
 
     def scan(self, start: bytes, count: int) -> List[Tuple[bytes, bytes]]:
-        """Cross-shard merging scan.  Each shard returns its ``count``
-        smallest keys ≥ start (sorted); the global first ``count`` keys
-        are therefore covered by the union, and hash partitioning makes
-        the per-shard streams disjoint — a plain k-way merge suffices."""
-        streams = [s.scan(start, count) for s in self.shards]
-        merged = _heapq.merge(*streams, key=lambda kv: kv[0])
-        out: List[Tuple[bytes, bytes]] = []
-        for kv in merged:
-            out.append(kv)
-            if len(out) >= count:
-                break
-        return out
+        """Cross-shard merging scan.  Each shard contributes its ``count``
+        smallest *authoritative* keys ≥ start — candidates whose key no
+        longer routes to that shard (in-flight migration copies on the
+        target, pre-cleanup orphans on a former owner) are filtered out
+        at the index-entry level inside the shard scan, so junk never
+        consumes the budget nor costs value reads.  A surviving key's
+        owner shard therefore always lists it within its own top
+        ``count``, the streams are pairwise disjoint (a key routes to
+        exactly one shard), and a plain k-way merge of the first
+        ``count`` keys is exact.  The routing guard keeps the slot map
+        still across all the per-shard scans, so the filter is
+        consistent shard to shard."""
+        with self._route_guard():
+            streams = [self._authoritative_scan(sid, start, count)
+                       for sid in range(self.n_shards)]
+            merged = _heapq.merge(*streams, key=lambda kv: kv[0])
+            out: List[Tuple[bytes, bytes]] = []
+            for kv in merged:
+                out.append(kv)
+                if len(out) >= count:
+                    break
+            return out
+
+    def _authoritative_scan(self, sid: int, start: bytes, count: int
+                            ) -> List[Tuple[bytes, bytes]]:
+        """``count`` smallest keys ≥ start that *currently route* to
+        shard ``sid``, or every one it has if fewer remain.  The routing
+        filter runs inside the shard scan on index entries, *before*
+        value resolution — migration copies and orphans cost no value
+        reads and never consume the result budget."""
+        return self.shards[sid].scan(
+            start, count,
+            accept=lambda k: self.slot_map[slot_of(k, self.n_slots)] == sid)
 
     # ==================================================================
     # Lifecycle / background
@@ -317,6 +525,7 @@ class ShardedKVStore:
             "max_gc_threads": self.sched_core.max_gc,
             "gc_bw_fraction": self.sched_core.gc_write_limiter.fraction,
             "wal": self.sched_core.wal_stats(),
+            "rebalance": self.rebalancer.stats(),
             "per_shard_counters": [dict(s.stats_counters)
                                    for s in self.shards],
         }

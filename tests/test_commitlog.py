@@ -174,6 +174,46 @@ def test_cache_budget_split_sums_to_configured_budget():
     assert all(b < small.block_bytes for b in got[1:])
 
 
+def test_solo_write_batch_is_one_sync():
+    """Solo group commit: KVStore.write_batch coalesces its WAL records
+    into one device sync per batch (plus at most the memtable-rotation
+    syncs), reported through stats()['wal']."""
+    db = KVStore(preset("scavenger_plus"))
+    db.write_batch([("put", b"b%05d" % i, b"v" * 700) for i in range(64)])
+    w = db.stats()["wal"]
+    rotations = db.stats_counters["flushes"] + len(db.immutables)
+    assert w["records"] == 64
+    assert w["syncs"] <= 1 + rotations
+    for j in range(1, 10):
+        db.write_batch([("put", b"b%05d" % (64 * j + i), b"v" * 700)
+                        for i in range(64)])
+    w = db.stats()["wal"]
+    rotations = db.stats_counters["flushes"] + len(db.immutables)
+    assert w["records"] == 640
+    assert w["syncs"] <= 10 + rotations + 1
+    # per-op durability outside a batch is unchanged
+    s0 = w["syncs"]
+    db.put(b"solo", b"y" * 600)
+    assert db.stats()["wal"]["syncs"] == s0 + 1
+
+
+def test_solo_write_batch_crash_recovery():
+    """Coalesced solo-batch records replay through the plain WAL parser
+    after a crash (same record framing, one contiguous append)."""
+    device = BlockDevice()
+    db = KVStore(preset("scavenger_plus"), device=device)
+    ops = [("put", b"r%05d" % i, bytes([i % 251]) * 900) for i in range(80)]
+    ops.append(("del", b"r%05d" % 7))
+    db.write_batch(ops)
+    db2 = KVStore(preset("scavenger_plus"), device=device, recover=True)
+    for i in range(80):
+        k = b"r%05d" % i
+        want = None if i == 7 else bytes([i % 251]) * 900
+        assert db2.get(k) == want, k
+    assert db2.multi_get([b"r%05d" % 3, b"r%05d" % 7]) == \
+        [bytes([3]) * 900, None]
+
+
 def test_group_commit_log_replay_roundtrip():
     """Unit: framed records round-trip through a segment, preserving
     per-shard order and tags."""

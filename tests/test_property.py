@@ -87,6 +87,35 @@ def test_blobdb_matches_dict(ops):
     _run("blobdb", ops)
 
 
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_slot_routing_stable_for_unmigrated_slots(data):
+    """Resharding invariant: applying any sequence of slot moves changes
+    the route of exactly the moved slots — every key whose slot was not
+    migrated keeps its shard (no world rehash)."""
+    from repro.core.rebalance import default_slot_map, slot_of
+
+    n_shards = data.draw(st.integers(min_value=2, max_value=8))
+    n_slots = data.draw(st.sampled_from([16, 64, 256]))
+    slot_map = default_slot_map(n_shards, n_slots)
+    keys = data.draw(st.lists(st.binary(min_size=0, max_size=24),
+                              min_size=1, max_size=40))
+    before = {k: slot_map[slot_of(k, n_slots)] for k in keys}
+    moves = data.draw(st.lists(
+        st.tuples(st.integers(0, n_slots - 1),
+                  st.integers(0, n_shards - 1)), max_size=8))
+    moved = set()
+    for slot, dst in moves:
+        slot_map[slot] = dst
+        moved.add(slot)
+    for k in keys:
+        s = slot_of(k, n_slots)
+        assert 0 <= s < n_slots
+        assert s == slot_of(k, n_slots)          # deterministic
+        if s not in moved:
+            assert slot_map[s] == before[k]
+
+
 @settings(max_examples=20, deadline=None,
           suppress_health_check=[HealthCheck.too_slow])
 @given(valid=st.lists(st.booleans(), min_size=1, max_size=64),

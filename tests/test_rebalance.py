@@ -1,0 +1,428 @@
+"""Online shard rebalancing: slot routing, the epoch-versioned superblock
+(v1 upgrade, torn frames), migration correctness under concurrent traffic,
+mid-migration crash recovery, resumed cleanup, and the balancer policy."""
+
+import msgpack
+import pytest
+
+from repro.core import KVStore, ShardedKVStore, preset
+from repro.core.rebalance import DEFAULT_SLOTS, default_slot_map, slot_of
+from repro.core.sharded import SUPERBLOCK_FID, shard_of
+from repro.store.device import BlockDevice, IOClass
+
+
+def _fill(db, n=500, vlen=800, prefix=b"m"):
+    kv = {}
+    for i in range(n):
+        k = b"%s%06d" % (prefix, i)
+        v = bytes([i % 251]) * (vlen + i % 7)
+        db.put(k, v)
+        kv[k] = v
+    return kv
+
+
+def _slot_owned_by(db, shard_id):
+    return next(s for s, o in enumerate(db.slot_map) if o == shard_id)
+
+
+def _assert_state(db, kv):
+    """Every key readable exactly once with the right bytes — a full scan
+    equals the oracle (so nothing is lost and nothing appears twice)."""
+    for k, v in kv.items():
+        assert db.get(k) == v, k
+    got = db.scan(b"", len(kv) + 100)
+    assert got == sorted(kv.items()), (len(got), len(kv))
+
+
+def test_slot_routing_composition():
+    """db routing == slot_map[slot_of(key)]; the legacy module helper is
+    the default-map composition and spreads keys across all shards."""
+    db = ShardedKVStore(preset("scavenger_plus", num_slots=64), n_shards=4)
+    keys = [b"user%020d" % i for i in range(300)] + [b"", b"x", b"t001/k"]
+    for k in keys:
+        assert db.shard_of(k) == db.slot_map[slot_of(k, 64)]
+        assert db.shard_for(k) is db.shards[db.shard_of(k)]
+    assert {db.shard_of(k) for k in keys} == {0, 1, 2, 3}
+    for n in (1, 2, 4, 8):
+        for k in keys[:50]:
+            assert shard_of(k, n) == \
+                default_slot_map(n, DEFAULT_SLOTS)[slot_of(k, DEFAULT_SLOTS)]
+
+
+def test_manual_migration_moves_slot_and_preserves_data():
+    db = ShardedKVStore(preset("scavenger_plus", num_slots=32), n_shards=4)
+    kv = _fill(db)
+    slot = _slot_owned_by(db, 0)
+    slot_keys = [k for k in kv if slot_of(k, 32) == slot]
+    assert slot_keys
+    assert db.rebalancer.start_migration(slot, 1)
+    db.drain()
+    assert db.epoch == 1 and db.slot_map[slot] == 1
+    assert db.rebalancer.inflight == {}
+    for k in slot_keys:
+        assert db.shard_of(k) == 1
+        # the former owner's copy is tombstoned (GC-riding cleanup)
+        assert db.shards[0].get(k) is None
+    _assert_state(db, kv)
+    st = db.stats()["rebalance"]
+    assert st["slots_moved"] == 1 and st["cleanups"] == 1
+    assert st["keys_moved"] >= len(slot_keys) - 1   # deletes need no copy
+
+
+def test_reads_and_writes_during_inflight_migration():
+    """While a slot's move is in flight, writes keep landing on the source
+    and reads dual-route source-then-target; the epoch commit catches up
+    the delta so post-commit state includes mid-flight updates."""
+    db = ShardedKVStore(preset("scavenger_plus", num_slots=32), n_shards=2)
+    kv = _fill(db, n=400)
+    slot = _slot_owned_by(db, 0)
+    slot_keys = [k for k in kv if slot_of(k, 32) == slot]
+    assert len(slot_keys) >= 3
+    assert db.rebalancer.start_migration(slot, 1)
+    assert db.rebalancer.inflight == {slot: 1}
+    # dual-routed reads see source state (including after a fresh delete)
+    for k in slot_keys[:3]:
+        assert db.get(k) == kv[k], k
+    db.put(slot_keys[0], b"MIDFLIGHT" * 99)
+    kv[slot_keys[0]] = b"MIDFLIGHT" * 99
+    db.delete(slot_keys[1])
+    kv.pop(slot_keys[1])
+    assert db.get(slot_keys[0]) == kv[slot_keys[0]]
+    assert db.get(slot_keys[1]) is None       # tombstone wins over any copy
+    db.drain()
+    assert db.slot_map[slot] == 1
+    _assert_state(db, kv)
+    assert db.stats()["rebalance"]["catchup_keys"] >= 2
+
+
+def test_no_lost_writes_when_commit_lands_mid_stream():
+    """The epoch commit becomes due *during* a routed write (the inner
+    pump pops it between the route decision and the record landing).
+    The routing guard defers the commit to the op boundary, so the
+    catch-up scan sees every record — nothing is lost."""
+    db = ShardedKVStore(preset("scavenger_plus", num_slots=16), n_shards=2)
+    kv = _fill(db, n=300, prefix=b"w")
+    slot = _slot_owned_by(db, 0)
+    slot_keys = [k for k in kv if slot_of(k, 16) == slot]
+    assert len(slot_keys) >= 3
+    assert db.rebalancer.start_migration(slot, 1)
+    # keep writing to the migrating slot until the commit lands mid-stream
+    i = 0
+    while db.rebalancer.inflight and i < 100_000:
+        k = slot_keys[i % len(slot_keys)]
+        v = b"w%06d" % i
+        db.put(k, v * 30)
+        kv[k] = v * 30
+        i += 1
+    assert not db.rebalancer.inflight          # commit landed mid-stream
+    assert db.slot_map[slot] == 1
+    db.drain()
+    _assert_state(db, kv)
+    # same race through the batched path, with a second migration
+    slot2 = _slot_owned_by(db, 0)
+    keys2 = [k for k in kv if slot_of(k, 16) == slot2]
+    assert keys2
+    assert db.rebalancer.start_migration(slot2, 1)
+    i = 0
+    while db.rebalancer.inflight and i < 100_000:
+        batch = []
+        for j, k in enumerate(keys2):
+            v = b"b%06d" % (i + j)
+            batch.append(("put", k, v * 30))
+            kv[k] = v * 30
+        db.write_batch(batch)
+        i += 1
+    assert db.slot_map[slot2] == 1
+    db.drain()
+    _assert_state(db, kv)
+
+
+def test_scan_complete_during_inflight_migration():
+    """Filtered migration copies must not consume a shard's scan budget:
+    a small-count scan during an in-flight move (including after a
+    mid-flight delete) returns exactly the global smallest live keys."""
+    db = ShardedKVStore(preset("scavenger_plus", num_slots=16), n_shards=2)
+    kv = _fill(db, n=300, prefix=b"s")
+    slot = _slot_owned_by(db, 0)
+    slot_keys = sorted(k for k in kv if slot_of(k, 16) == slot)
+    assert len(slot_keys) >= 5
+    assert db.rebalancer.start_migration(slot, 1)
+    db.delete(slot_keys[0])                     # mid-flight delete
+    kv.pop(slot_keys[0])
+    want = sorted(kv.items())
+    for count in (3, 8, len(slot_keys), 50):
+        assert db.scan(b"", count) == want[:count], count
+    db.drain()
+    _assert_state(db, kv)
+
+
+def test_aborted_migration_orphans_swept_at_recovery():
+    """A migration that crashes pre-commit leaves copies on its target;
+    recovery matches the durable intent frame against the committed moves
+    and tombstones the orphans — even when the slot later migrates to a
+    *different* shard, the stale target never leaks or resurrects."""
+    device = BlockDevice()
+    opts = preset("scavenger_plus", num_slots=16)
+    db = ShardedKVStore(opts, n_shards=3, device=device)
+    kv = _fill(db, n=300, prefix=b"o")
+    slot = _slot_owned_by(db, 0)
+    slot_keys = [k for k in kv if slot_of(k, 16) == slot]
+    assert slot_keys
+    assert db.rebalancer.start_migration(slot, 1)     # crash pre-commit
+    db2 = ShardedKVStore(preset("scavenger_plus", num_slots=16),
+                         device=device, recover=True)
+    assert db2.epoch == 0 and db2.slot_map[slot] == 0
+    assert db2.rebalancer.counters["aborted_cleanups"] == 1
+    for k in slot_keys:
+        assert db2.shards[1].get(k) is None           # orphans tombstoned
+    _assert_state(db2, kv)
+    # delete a slot key, then migrate the slot to a DIFFERENT shard: the
+    # old target's swept orphan must not resurrect the key
+    db2.delete(slot_keys[0])
+    kv.pop(slot_keys[0])
+    assert db2.rebalancer.start_migration(slot, 2)
+    db2.drain()
+    assert db2.slot_map[slot] == 2
+    assert db2.get(slot_keys[0]) is None
+    _assert_state(db2, kv)
+    # the abort marker is durable: a further recovery does not re-sweep
+    db3 = ShardedKVStore(preset("scavenger_plus", num_slots=16),
+                         device=device, recover=True)
+    assert db3.rebalancer.counters["aborted_cleanups"] == 0
+    _assert_state(db3, kv)
+
+
+def test_window_delete_with_dropped_tombstone_does_not_resurrect():
+    """Delete a slot key during the migration window, then churn hard
+    enough that bottom-level compaction drops the tombstone from the
+    source before the epoch commit runs.  The catch-up scan then sees no
+    trace of the delete — the front-end's window-delete record must stop
+    the target's stale copy from resurrecting the key, both via
+    dual-routed reads while in flight and after the commit."""
+    db = ShardedKVStore(preset("scavenger_plus", num_slots=8), n_shards=2)
+    kv = {}
+    # big slot values -> a long copy job -> a wide migration window
+    for i in range(200):
+        k = b"big%05d" % i
+        v = bytes([i % 251]) * 16384
+        db.put(k, v)
+        kv[k] = v
+    slot = _slot_owned_by(db, 0)
+    slot_keys = [k for k in kv if slot_of(k, 8) == slot]
+    assert len(slot_keys) >= 3
+    victim = slot_keys[0]
+    assert db.rebalancer.start_migration(slot, 1)
+    db.delete(victim)
+    kv.pop(victim)
+    saw_dropped_tombstone = False
+    for i in range(1500):
+        if not db.rebalancer.inflight:
+            break
+        k = b"fill%06d" % i
+        v = b"f" * 4000
+        db.put(k, v)
+        kv[k] = v
+        # the hazard state: source has no trace of the victim while the
+        # migration (and the target's stale copy) is still in flight
+        if db.rebalancer.inflight and \
+                db.shards[0].get_entry(victim, IOClass.USER_READ) is None:
+            saw_dropped_tombstone = True
+            assert db.get(victim) is None, "stale copy served mid-flight"
+    db.drain()
+    assert db.get(victim) is None, "deleted key resurrected after commit"
+    _assert_state(db, kv)
+    if saw_dropped_tombstone:
+        assert db.rebalancer.counters["window_deletes"] >= 1
+
+
+def test_crash_between_copy_and_epoch_commit():
+    """Kill after the slot copy but before the epoch commit: recovery must
+    land on the pre-commit epoch with no lost or duplicated keys (target
+    orphans stay invisible), and a retried migration must succeed."""
+    device = BlockDevice()
+    opts = preset("scavenger_plus", num_slots=32)
+    db = ShardedKVStore(opts, n_shards=3, device=device)
+    kv = _fill(db, prefix=b"c")
+    slot = _slot_owned_by(db, 0)
+    assert db.rebalancer.start_migration(slot, 2)
+    # crash: copies are durable in the shared WAL, the commit never ran
+    db2 = ShardedKVStore(preset("scavenger_plus", num_slots=32),
+                         device=device, recover=True)
+    assert db2.epoch == 0 and db2.slot_map[slot] == 0
+    _assert_state(db2, kv)
+    # the retried migration overwrites the orphan copies and commits
+    assert db2.rebalancer.start_migration(slot, 2)
+    db2.drain()
+    assert db2.epoch == 1 and db2.slot_map[slot] == 2
+    _assert_state(db2, kv)
+    # a second recovery sees the committed epoch
+    db3 = ShardedKVStore(preset("scavenger_plus", num_slots=32),
+                         device=device, recover=True)
+    assert db3.epoch == 1 and db3.slot_map[slot] == 2
+    _assert_state(db3, kv)
+
+
+def test_crash_between_epoch_commit_and_cleanup():
+    """A committed move whose source cleanup never ran (no 'cleaned'
+    frame) must be finished at recovery: the new epoch holds, source
+    orphans never surface, and the resumed cleanup tombstones them."""
+    device = BlockDevice()
+    opts = preset("scavenger_plus", num_slots=16)
+    db = ShardedKVStore(opts, n_shards=2, device=device)
+    kv = _fill(db, n=300, prefix=b"e")
+    slot = _slot_owned_by(db, 0)
+    slot_keys = [k for k in kv if slot_of(k, 16) == slot]
+    assert slot_keys
+    # hand-craft the post-commit/pre-cleanup state: copies on the target,
+    # the epoch frame appended, no 'cleaned' frame, crash before the
+    # in-memory map updated
+    from repro.store.device import IOClass
+    from repro.store.format import VT_VALUE
+    for k in slot_keys:
+        db.shards[1].write_index_entry(k, VT_VALUE, kv[k],
+                                       IOClass.GC_WRITE_INDEX)
+    new_map = list(db.slot_map)
+    new_map[slot] = 1
+    db._append_superblock({"version": 2, "epoch": 1, "slot_map": new_map,
+                           "move": [slot, 0, 1]})
+    db2 = ShardedKVStore(preset("scavenger_plus", num_slots=16),
+                         device=device, recover=True)
+    assert db2.epoch == 1 and db2.slot_map[slot] == 1
+    assert db2.rebalancer.counters["cleanups"] == 1    # resumed at recovery
+    for k in slot_keys:
+        assert db2.shards[0].get(k) is None            # orphans tombstoned
+    _assert_state(db2, kv)
+    # the 'cleaned' frame is durable: a further recovery does not re-clean
+    db3 = ShardedKVStore(preset("scavenger_plus", num_slots=16),
+                         device=device, recover=True)
+    assert db3.rebalancer.counters["cleanups"] == 0
+    _assert_state(db3, kv)
+
+
+def test_v1_superblock_upgrade():
+    """A v1 superblock (fixed crc32 % n era) decodes to the default slot
+    map when n_shards divides the slot count; the upgraded store keeps
+    working, can migrate, and persists v2 frames thereafter."""
+    device = BlockDevice()
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=4, device=device)
+    kv = _fill(db, n=300, prefix=b"v")
+    # rewrite fid 1 as a v1 superblock (single unversioned frame)
+    blob = msgpack.packb(
+        {"n_shards": 4,
+         "manifests": [s.versions.manifest_fid for s in db.shards]},
+        use_bin_type=True)
+    device._files[SUPERBLOCK_FID] = \
+        bytearray(len(blob).to_bytes(4, "little") + blob)
+    db2 = ShardedKVStore(preset("scavenger_plus"), device=device,
+                         recover=True)
+    assert db2.epoch == 0 and db2.n_slots == DEFAULT_SLOTS
+    assert db2.slot_map == default_slot_map(4, DEFAULT_SLOTS)
+    _assert_state(db2, kv)
+    # the upgraded store migrates and the v2 frame survives recovery
+    slot = _slot_owned_by(db2, 0)
+    assert db2.rebalancer.start_migration(slot, 3)
+    db2.drain()
+    assert db2.epoch == 1 and db2.slot_map[slot] == 3
+    db3 = ShardedKVStore(preset("scavenger_plus"), device=device,
+                         recover=True)
+    assert db3.epoch == 1 and db3.slot_map[slot] == 3
+    _assert_state(db3, kv)
+
+
+def test_v1_upgrade_refuses_incompatible_shard_count():
+    """crc32 % 3 placement cannot be expressed by a 256-slot map — the
+    upgrade must fail loudly instead of silently misrouting."""
+    device = BlockDevice()
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=3, device=device)
+    blob = msgpack.packb(
+        {"n_shards": 3,
+         "manifests": [s.versions.manifest_fid for s in db.shards]},
+        use_bin_type=True)
+    device._files[SUPERBLOCK_FID] = \
+        bytearray(len(blob).to_bytes(4, "little") + blob)
+    with pytest.raises(RuntimeError, match="v1 superblock"):
+        ShardedKVStore(preset("scavenger_plus"), device=device, recover=True)
+
+
+def test_torn_epoch_frame_recovers_pre_commit():
+    """A crash can tear the epoch-commit frame itself; replay must discard
+    the partial frame and recover the previous epoch."""
+    device = BlockDevice()
+    opts = preset("scavenger_plus", num_slots=16)
+    db = ShardedKVStore(opts, n_shards=2, device=device)
+    kv = _fill(db, n=200, prefix=b"t")
+    slot = _slot_owned_by(db, 0)
+    size_before = device.size(SUPERBLOCK_FID)
+    new_map = list(db.slot_map)
+    new_map[slot] = 1
+    db._append_superblock({"version": 2, "epoch": 1, "slot_map": new_map,
+                           "move": [slot, 0, 1]})
+    # tear the frame in half
+    torn = size_before + (device.size(SUPERBLOCK_FID) - size_before) // 2
+    device._files[SUPERBLOCK_FID] = device._files[SUPERBLOCK_FID][:torn]
+    db2 = ShardedKVStore(preset("scavenger_plus", num_slots=16),
+                         device=device, recover=True)
+    assert db2.epoch == 0 and db2.slot_map[slot] == 0
+    _assert_state(db2, kv)
+
+
+def test_balancer_moves_hot_slots():
+    """Skewed traffic concentrated on a few slots of one shard trips the
+    policy: slots migrate to the cold shard, write loads converge, data
+    stays intact."""
+    opts = preset("scavenger_plus", num_slots=32, rebalance=True,
+                  rebalance_threshold=1.15, rebalance_min_bytes=16 << 10)
+    db = ShardedKVStore(opts, n_shards=2)
+    hot = [k for k in (b"h%05d" % i for i in range(200))
+           if db.shard_of(k) == 0][:6]
+    assert len(hot) == 6
+    kv = {}
+    for j in range(300):
+        for k in hot:
+            v = bytes([j % 251]) * 2048
+            db.put(k, v)
+            kv[k] = v
+        if j % 8 == 0:
+            k = b"z%05d" % j
+            db.put(k, b"w" * 512)
+            kv[k] = b"w" * 512
+    db.drain()
+    st = db.stats()["rebalance"]
+    assert st["slots_moved"] >= 1
+    loads = st["shard_live_loads"]
+    assert max(loads) <= opts.rebalance_threshold * (sum(loads) / len(loads))
+    _assert_state(db, kv)
+    # the shared core quiesced and no migration is stuck in flight
+    assert db.rebalancer.inflight == {}
+    assert all(v == 0 for v in db.sched_core.active.values())
+
+
+def test_balancer_disabled_by_default():
+    db = ShardedKVStore(preset("scavenger_plus", num_slots=32), n_shards=2)
+    _fill(db, n=600, vlen=2048)
+    db.drain()
+    assert db.stats()["rebalance"]["migrations"] == 0
+    assert db.epoch == 0
+
+
+def test_write_batch_validates_before_commit():
+    """A malformed op anywhere in the batch rejects the whole batch before
+    the commit group opens — nothing applied, nothing queued, nothing
+    durable (both front-ends)."""
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=2)
+    w0 = db.sched_core.wal_records
+    for bad in [[("put", b"a", b"x" * 600), ("frob", b"b")],
+                [("put", b"a", b"x" * 600), ("put", b"b")],
+                [("put", b"a", b"x" * 600), ("put", b"b", 123)],
+                [("put", b"a", b"x" * 600), ("put", "str-key", b"v")],
+                [("put", b"a", b"x" * 600), 7],
+                [("del", b"a", b"extra")], [()]]:
+        with pytest.raises(ValueError, match="bad batch op"):
+            db.write_batch(bad)
+    assert db.sched_core.wal_records == w0
+    assert db.get(b"a") is None
+    solo = KVStore(preset("scavenger_plus"))
+    with pytest.raises(ValueError, match="bad batch op"):
+        solo.write_batch([("put", b"a", b"x" * 600), ("nope", b"b")])
+    assert solo.get(b"a") is None
+    assert solo.sched.core.wal_records == 0
