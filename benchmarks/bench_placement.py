@@ -1,0 +1,129 @@
+"""Adaptive KV-placement suite: fixed ``sep_threshold`` ladder vs the
+adaptive engine (core/placement.py).
+
+Part 1 — the ladder.  A small-value-heavy bimodal mixture (90 % small /
+10 % large by default) is loaded and then churned with zipfian updates
+at 3x the dataset, once per fixed threshold in ``LADDER`` and once with
+``adaptive_placement`` on.  Each row reports **space amplification**
+(device bytes / logical user bytes, end state) and **write
+amplification** per phase (``wampL`` load, ``wampU`` update: device
+write bytes / user-written bytes) — the two axes the placement cost
+model trades.  The ``summary`` row checks the acceptance shape on the
+*steady-state* (update-phase) write amp — the load phase charges the
+adaptive engine its one-off convergence migrations, which a long-lived
+store amortizes to nothing: the adaptive policy must beat the *worst*
+fixed threshold on space amp without exceeding the *best* fixed
+threshold's update write amp by more than 10 %.
+
+Part 2 — per-shard divergence.  Two tenants with opposite value-size
+mixtures (small-hot vs large) are pinned to different shards of a
+2-shard store (keys chosen by their slot routing); each shard's private
+placement engine sees only its tenant's population, so the reported
+``per_shard_threshold`` must diverge: the small-hot shard's boundary
+rises above its value size (churny small values stay inline), the
+large shard's drops to the floor (its values always separate).
+
+Env (see common.py): REPRO_BENCH_MB, REPRO_BENCH_FAST
+  REPRO_BENCH_VALUES  mixture for part 1 (default bimodal-128-16384-90)
+"""
+
+from __future__ import annotations
+
+import os
+
+from .common import dataset_mb, fast
+from repro.bench import (WorkloadSpec, gen_load, gen_update, make_db,
+                         run_phase, space_amplification)
+
+LADDER = [64, 512, 4096, 32768]
+
+
+def _counting(ops, acc: list):
+    """Pass ops through, accumulating user-written logical bytes."""
+    for op in ops:
+        if op[0] == "put":
+            acc[0] += len(op[1]) + len(op[2])
+        yield op
+
+
+def _ladder_rows() -> list:
+    value_kind = os.environ.get("REPRO_BENCH_VALUES", "bimodal-128-16384-90")
+    ds = dataset_mb() << 20
+    if fast():
+        ds = min(ds, 2 << 20)
+    spec = WorkloadSpec(value_kind=value_kind, dataset_bytes=ds,
+                        update_bytes=3 * ds)
+    variants = [(f"fixed{t}", dict(sep_threshold=t)) for t in LADDER]
+    variants.append(("adaptive", dict(adaptive_placement=True)))
+    rows, amp, wamp_u = [], {}, {}
+    for name, over in variants:
+        db = make_db("scavenger_plus", spec, **over)
+        u_load, u_upd = [0], [0]
+        ld = run_phase(db, "load", _counting(gen_load(spec), u_load),
+                       drain=True)
+        r = run_phase(db, "update", _counting(gen_update(spec), u_upd),
+                      drain=True)
+        db.flush_all()
+        amp[name] = space_amplification(db)
+        wamp_l = ld.io_write_bytes / max(1, u_load[0])
+        wamp_u[name] = r.io_write_bytes / max(1, u_upd[0])
+        s = db.stats()
+        pl = s["placement"]
+        us = 1e6 * r.sim_seconds / max(1, r.ops)
+        rows.append(
+            f"placement/{name},{us:.2f},"
+            f"amp={amp[name]:.3f} wampL={wamp_l:.3f} "
+            f"wampU={wamp_u[name]:.3f} "
+            f"thr={pl['effective_threshold']} "
+            f"inl={pl['inline_records']} sep={pl['separated_records']} "
+            f"mig_in={pl['migr_to_inline_keys']} "
+            f"mig_sep={pl['migr_to_sep_keys']} "
+            f"gc={s['counters']['gc_runs']:.0f}")
+    worst_amp = max(amp[f"fixed{t}"] for t in LADDER)
+    best_wamp = min(wamp_u[f"fixed{t}"] for t in LADDER)
+    ok = int(amp["adaptive"] < worst_amp
+             and wamp_u["adaptive"] <= 1.1 * best_wamp)
+    rows.append(
+        f"placement/summary,0.00,"
+        f"adaptive_amp={amp['adaptive']:.3f} "
+        f"worst_fixed_amp={worst_amp:.3f} "
+        f"adaptive_wampU={wamp_u['adaptive']:.3f} "
+        f"best_fixed_wampU={best_wamp:.3f} ok={ok}")
+    return rows
+
+
+def _divergence_rows() -> list:
+    ds = dataset_mb() << 20
+    if fast():
+        ds = min(ds, 2 << 20)
+    spec = WorkloadSpec(value_kind="fixed-1024", dataset_bytes=ds,
+                        update_bytes=0)
+    db = make_db("scavenger_plus_adaptive", spec, n_shards=2,
+                 placement_retune_interval=256)
+    # Pin each tenant to one shard by picking keys that route there: the
+    # ROADMAP's per-tenant heat specialization, expressed through slot
+    # routing instead of a dedicated router.
+    n_keys = 150 if fast() else 400
+    pools: list = [[], []]
+    i = 0
+    while min(len(p) for p in pools) < n_keys:
+        k = b"d%06d" % i
+        sid = db.shard_of(k)
+        if len(pools[sid]) < n_keys:
+            pools[sid].append(k)
+        i += 1
+    rounds = 5 if fast() else 8
+    for r in range(rounds):
+        for j in range(n_keys):
+            db.put(pools[0][j], bytes([32 + (r + j) % 64]) * 128)
+            db.put(pools[1][j], bytes([32 + (r - j) % 64]) * 8192)
+    db.flush_all()
+    thr = db.stats()["placement"]["per_shard_threshold"]
+    diverged = int(thr[0] > 128 and thr[1] <= 8192 and thr[0] != thr[1])
+    return [f"placement/diverge,0.00,"
+            f"thr_small_tenant={thr[0]} thr_large_tenant={thr[1]} "
+            f"diverged={diverged}"]
+
+
+def run() -> list:
+    return _ladder_rows() + _divergence_rows()

@@ -26,6 +26,9 @@ zero lost or duplicated keys.
 Env (see common.py): REPRO_BENCH_MB, REPRO_BENCH_SYSTEMS, REPRO_BENCH_FAST
   REPRO_BENCH_SHARDS   comma list of shard counts (default 1,2,4,8)
   REPRO_BENCH_CLIENTS  logical clients (default 4)
+  REPRO_BENCH_VALUES   value-size model for the sweep (default mixed-8k;
+                       also e.g. bimodal-128-16384-90, lognormal-1024-12
+                       — the mixed-size populations placement exercises)
 """
 
 from __future__ import annotations
@@ -48,11 +51,12 @@ def shard_counts() -> list:
 
 def run() -> list:
     n_clients = int(os.environ.get("REPRO_BENCH_CLIENTS", "4"))
+    value_kind = os.environ.get("REPRO_BENCH_VALUES", "mixed-8k")
     ds = dataset_mb() << 20
     if fast():
         ds = min(ds, 2 << 20)
     # dataset/update sizes are per client (gen_multi_client semantics)
-    spec = WorkloadSpec(value_kind="mixed-8k",
+    spec = WorkloadSpec(value_kind=value_kind,
                         dataset_bytes=ds // n_clients,
                         update_bytes=3 * ds // n_clients)
     n_ops = 500 if fast() else max(1000, int(1.5 * spec.n_keys))

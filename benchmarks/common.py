@@ -21,7 +21,8 @@ from repro.bench import (WorkloadSpec, gen_load, gen_read, gen_scan,  # noqa: E4
 SYSTEMS = ["rocksdb", "blobdb", "titan", "terarkdb", "scavenger",
            "scavenger_plus"]
 SHORT = {"rocksdb": "RDB", "blobdb": "BlobDB", "titan": "Titan",
-         "terarkdb": "TDB", "scavenger": "S", "scavenger_plus": "S+"}
+         "terarkdb": "TDB", "scavenger": "S", "scavenger_plus": "S+",
+         "scavenger_plus_adaptive": "S+P"}
 
 
 def dataset_mb() -> int:

@@ -22,6 +22,8 @@ Suites:
   sharded        sharded front-end: shard count vs throughput/space amp
   rebalance      online shard rebalancing: skewed-tenant balance, scan
                  under migration, mid-migration crash recovery
+  placement      adaptive KV placement: fixed sep_threshold ladder vs
+                 adaptive (space amp + write amp), per-shard divergence
   kernels        Pallas kernel micro-costs (interpret mode)
   roofline       dry-run roofline terms (reads dryrun JSON artifacts)
 """
@@ -41,8 +43,8 @@ def main() -> None:
         if a.startswith("--json="):
             json_path = a.split("=", 1)[1]
     from . import (bench_features, bench_gc_breakdown, bench_micro,
-                   bench_sharded, bench_space_sources, bench_space_time,
-                   bench_ycsb)
+                   bench_placement, bench_sharded, bench_space_sources,
+                   bench_space_time, bench_ycsb)
     suites = {
         "space_time": bench_space_time.run,
         "gc_breakdown": bench_gc_breakdown.run,
@@ -52,6 +54,7 @@ def main() -> None:
         "features": bench_features.run,
         "sharded": bench_sharded.run,
         "rebalance": bench_sharded.run_rebalance,
+        "placement": bench_placement.run,
     }
     try:
         from . import bench_kernels

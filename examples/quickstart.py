@@ -80,3 +80,21 @@ reb = rdb.stats()["rebalance"]
 assert rdb.slot_map[slot] == 1 and reb["epoch"] == 1
 print(f"rebalance: epoch={reb['epoch']} slots_moved={reb['slots_moved']} "
       f"keys_moved={reb['keys_moved']} bytes_moved={reb['bytes_moved']}")
+
+# Adaptive KV placement: the separation threshold tunes itself per store
+# from a space-vs-write-amp cost model over observed value sizes and
+# update rates, and records migrate lazily on rewrite — GC reattaches
+# small/cold separated values inline, compaction re-separates large
+# inline ones.  Hot small values (overwritten soon) stay inline even
+# below the boundary, where the next compaction reclaims them for free.
+adb = KVStore(preset("scavenger_plus_adaptive"))
+for r in range(4):
+    for i in range(400):
+        adb.put(b"p%04d" % i, b"v" * (128 if i % 10 else 16384))
+adb.flush_all()
+pl = adb.stats()["placement"]
+print(f"placement: thr={pl['effective_threshold']}B "
+      f"inline={pl['inline_records']} separated={pl['separated_records']} "
+      f"migrated_in={pl['migr_to_inline_keys']} "
+      f"migrated_out={pl['migr_to_sep_keys']}")
+assert pl["adaptive"] and pl["retunes"] >= 1

@@ -72,7 +72,36 @@ class ValueModel:
             return 1024.0
         if self.kind == "pareto-8k":
             return 8192.0
+        if self.kind.startswith("lognormal"):
+            mean, _ = self._lognormal_params()
+            return mean
+        if self.kind.startswith("bimodal"):
+            small, large, p_small = self._bimodal_params()
+            return p_small * small + (1.0 - p_small) * large
         raise ValueError(self.kind)
+
+    # -- mixed-distribution knobs (kind-string encoded) -----------------
+    def _lognormal_params(self) -> Tuple[float, float]:
+        """``lognormal-<mean>[-<sigma_x10>]``: lognormal sizes with the
+        given mean and underlying-normal sigma (default 1.0) — the long
+        right tail object-store size studies report."""
+        parts = self.kind.split("-")
+        mean = float(int(parts[1]))
+        sigma = int(parts[2]) / 10.0 if len(parts) > 2 else 1.0
+        return mean, sigma
+
+    def _bimodal_params(self) -> Tuple[int, int, float]:
+        """``bimodal-<small>-<large>[-<pct_small>]``: a small/large
+        mixture with ``pct_small`` percent (default 90) of records small
+        — the small-value-heavy population the adaptive-placement
+        benchmarks exercise.  Small sizes jitter uniformly in
+        [small/2, 3*small/2] (mean preserved); large sizes are exact."""
+        parts = self.kind.split("-")
+        small, large = int(parts[1]), int(parts[2])
+        pct = int(parts[3]) if len(parts) > 3 else 90
+        if not (small >= 1 and large >= small and 0 < pct < 100):
+            raise ValueError(self.kind)
+        return small, large, pct / 100.0
 
     def _sample_sizes(self, n: int) -> np.ndarray:
         if self.kind.startswith("fixed"):
@@ -88,6 +117,17 @@ class ValueModel:
             u = self.rng.random(n)
             sizes = sigma / xi * ((1.0 - u) ** -xi - 1.0)
             return np.clip(sizes, 64, 64 << 10).astype(np.int64)
+        if self.kind.startswith("lognormal"):
+            mean, sig = self._lognormal_params()
+            mu = np.log(mean) - 0.5 * sig * sig   # E[lognormal] = mean
+            sizes = self.rng.lognormal(mu, sig, size=n)
+            return np.clip(sizes, 16, 256 << 10).astype(np.int64)
+        if self.kind.startswith("bimodal"):
+            small, large, p_small = self._bimodal_params()
+            lo = max(1, small // 2)
+            smalls = self.rng.integers(lo, 3 * small // 2 + 1, size=n)
+            pick = self.rng.random(n) < p_small
+            return np.where(pick, smalls, large).astype(np.int64)
         raise ValueError(self.kind)
 
     def next_size(self) -> int:

@@ -19,9 +19,11 @@ import heapq
 from typing import Callable, Iterator, List, Optional, Tuple
 
 from ..store.device import IOClass
-from ..store.format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF,
-                            decode_ka, encode_ka, entry_value_size, entry_vsst)
+from ..store.format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF, VT_VALUE,
+                            decode_ka, encode_ka, encode_kf,
+                            entry_value_size, entry_vsst)
 from ..store.tables import Entry, KTableWriter, LogTableWriter
+from .scheduler import JOB_COMPACTION
 from .version import FileMeta, VersionSet
 
 
@@ -159,6 +161,13 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
     blob_fid: Optional[int] = None
     new_blob_metas: List = []
     rewrite_blobs = (opts.kv_separation and opts.gc_mode == "compaction")
+    # Adaptive placement: compaction is rewriting every input entry
+    # anyway, so inline values that have outgrown the (possibly lowered)
+    # effective threshold re-separate here — the inline->sep migration
+    # riding the merge, symmetric to GC's reattach.
+    resep = opts.kv_separation and opts.adaptive_placement
+    sep_writer = None
+    sep_fid: Optional[int] = None
     blob_prefetch: dict = {}
     dropped_refs: List[Tuple[int, int]] = []   # (vsst_fid, bytes)
 
@@ -188,7 +197,7 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
             if vtype in (VT_INDEX_KA, VT_INDEX_KF):
                 dropped_refs.append((entry_vsst(vtype, payload),
                                      entry_value_size(vtype, payload)))
-            db.dropcache_record(ukey)
+            db.note_drop(ukey, entry_value_size(vtype, payload))
             continue
         kept_vt, kept_pl = vtype, payload
         if vtype == VT_DELETE and is_last:
@@ -223,6 +232,25 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
                     0, meta.live_value_bytes - len(v))
                 dropped_refs.append((vfid, 0))  # marks ref move; bytes done
                 entry = (ukey, seq, vtype, encode_ka(blob_fid, noff, nlen))
+        if resep and vtype == VT_VALUE and \
+                db.placement.want_separate_on_compaction(ukey, len(payload)):
+            if sep_writer is None or \
+                    sep_writer.estimated_bytes >= opts.vsst_bytes:
+                if sep_writer is not None and sep_writer.num_entries:
+                    new_blob_metas.append(db.finish_vsst(
+                        sep_writer, IOClass.COMPACTION_WRITE, fid=sep_fid))
+                sep_fid = db.device.create()
+                sep_writer = db.new_vsst_writer()
+            off, ln = sep_writer.add(ukey, payload)
+            # kept_vt/kept_pl stay the inline original: an identical older
+            # inline copy in a deeper level is still a free duplicate
+            # (its bytes vanish with the input file, no garbage exposed).
+            if opts.index_kind == "ka":
+                entry = (ukey, seq, VT_INDEX_KA, encode_ka(sep_fid, off, ln))
+            else:
+                entry = (ukey, seq, VT_INDEX_KF,
+                         encode_kf(sep_fid, len(payload)))
+            db.placement.note_migration(True, len(payload))
         ukey, seq, vtype, payload = entry
         writer.add(entry)
         if writer.estimated_bytes >= opts.ksst_bytes:
@@ -231,6 +259,10 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
         new_blob_metas.append(db.finish_vsst(blob_writer,
                                              IOClass.COMPACTION_WRITE,
                                              fid=blob_fid))
+    if sep_writer is not None and sep_writer.num_entries:
+        new_blob_metas.append(db.finish_vsst(sep_writer,
+                                             IOClass.COMPACTION_WRITE,
+                                             fid=sep_fid))
     if writer.num_entries:
         fid, props = writer.finish(IOClass.COMPACTION_WRITE)
         outputs.append((fid, props))
@@ -251,6 +283,11 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
         })
         for fid in input_fids:
             db.drop_table(fid)
+        tree_bytes = sum(props["file_size"] for _, props in outputs)
+        db.placement.note_compaction(tree_bytes)
+        db.sched.note_bg_write(
+            JOB_COMPACTION,
+            tree_bytes + sum(m.file_size for m in new_blob_metas))
         db.stats_counters["compactions"] += 1
         db._gc_check_pending = True     # TerarkDB: GC trigger re-evaluated
         db.after_background()           # after each compaction (II-B)

@@ -19,7 +19,8 @@ from typing import Callable, Dict, Iterator, List, Optional, Tuple
 from ..store.blocks import BlockCache
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
 from ..store.format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF, VT_VALUE,
-                            decode_ka, decode_kf, encode_ka, encode_kf)
+                            decode_ka, decode_kf, encode_ka, encode_kf,
+                            entry_value_size)
 from ..store.memtable import WAL, Memtable
 from ..store.tables import (Entry, KTableReader, KTableWriter, LogTableReader,
                             LogTableWriter, RTableReader, RTableWriter,
@@ -27,9 +28,9 @@ from ..store.tables import (Entry, KTableReader, KTableWriter, LogTableReader,
 from .commitlog import (GroupCommitLog, MemtableLog, SharedCommitSink,
                         SoloCommitSink)
 from .compaction import execute_compaction, plan_compaction
-from .dropcache import DropCache
 from .gc import pick_gc_candidate, run_gc_terark, run_gc_titan
 from .options import Options
+from .placement import PlacementEngine
 from .scheduler import (JOB_COMPACTION, JOB_FLUSH, JOB_GC, Scheduler,
                         SchedulerCore)
 from .version import FileMeta, VersionSet, VSSTMeta
@@ -83,7 +84,11 @@ class KVStore:
         # Re-offer admission on every job completion: a freed lane may be
         # the one this store's pending background work is waiting for.
         self.sched.core.add_waiter(self.maybe_schedule_background)
-        self.dropcache = DropCache(opts.dropcache_entries)
+        # Placement policy: owns the HeatSketch (ex-DropCache) shared by
+        # hot/cold vSST splitting and the adaptive separate-vs-inline
+        # boundary; a no-op stand-in for the static threshold when
+        # opts.adaptive_placement is off.
+        self.placement = PlacementEngine(opts)
         self.mem = Memtable()
         if recover:
             if commit_log is None:
@@ -170,6 +175,18 @@ class KVStore:
     def _write(self, ukey: bytes, vtype: int, payload: bytes) -> None:
         self.sched.pump()
         self._maybe_stall()
+        if self.opts.adaptive_placement:
+            # Placement signals, pre-insert: the size population (every
+            # value write) and the lifetime signal (overwriting a version
+            # still in the memtable is a drop compaction will never see —
+            # a flushed older version is observed there instead, so each
+            # shadowed version is counted exactly once).
+            old = self.mem.get(ukey)
+            if old is not None and old[1] != VT_DELETE:
+                self.placement.observe_drop(ukey,
+                                            entry_value_size(old[1], old[2]))
+            if vtype == VT_VALUE:
+                self.placement.observe_write(ukey, len(payload))
         self.versions.seq += 1
         self.sink.append(ukey, self.versions.seq, vtype, payload)
         self.mem.put(ukey, self.versions.seq, vtype, payload)
@@ -497,9 +514,19 @@ class KVStore:
             self.versions.log_and_apply({"del_vsst": [meta.fid]})
             self.drop_table(meta.fid)
 
-    def dropcache_record(self, ukey: bytes) -> None:
-        if self.opts.dropcache:
-            self.dropcache.record_drop(ukey)
+    @property
+    def dropcache(self):
+        """The shared heat sketch under its historical name (hot/cold
+        vSST splitting reads membership; placement reads drop counts)."""
+        return self.placement.heat
+
+    def note_drop(self, ukey: bytes, old_bytes: int = 0) -> None:
+        """A live version of ``ukey`` carrying ``old_bytes`` of value was
+        shadowed — compaction entry drops and memtable overwrites both
+        land here, feeding the heat sketch (paper III-B.3) and the
+        placement engine's churn histogram."""
+        if self.opts.dropcache or self.opts.adaptive_placement:
+            self.placement.observe_drop(ukey, old_bytes)
 
     # ==================================================================
     # Background work
@@ -581,7 +608,7 @@ class KVStore:
 
         for ukey, (seq, vtype, payload) in imm.sorted_items():
             if (vtype == VT_VALUE and opts.kv_separation
-                    and len(payload) >= opts.sep_threshold):
+                    and self.placement.decide(ukey, len(payload))):
                 hot = opts.dropcache and self.dropcache.is_hot(ukey)
                 vfid, vw = _vwriter(hot)
                 off, ln = vw.add(ukey, payload)
@@ -627,6 +654,9 @@ class KVStore:
                 if fid in self.versions.pending_wals:
                     self.versions.pending_wals.remove(fid)
             self.stats_counters["flushes"] += 1
+            self.placement.note_flush(
+                sum(props["file_size"] for _, props in ksst_writers))
+            self.sched.note_bg_write(JOB_FLUSH, flushed_bytes)
             self.sched.note_flush(flushed_bytes, max(elapsed, 1e-9))
             self.after_background()
 
@@ -652,6 +682,10 @@ class KVStore:
     def _update_pressures(self) -> None:
         p_i, p_v = self.pressures()
         self.sched.update_allocation(p_i, p_v)
+        if self.opts.adaptive_placement:
+            # Keep the cost model's tree-overhead term live (S_index is a
+            # couple of list sums — cheap at this call rate).
+            self.placement.note_tree(self.versions.s_index())
 
     def drain(self, max_sim_s: float = 1e9) -> None:
         """Let all in-flight background work complete (quiesce)."""
@@ -696,8 +730,10 @@ class KVStore:
             # with its siblings (a group sync is one sync, not one per
             # shard), so read it once at the front-end, not per shard.
             "wal": self.sched.core.wal_stats(),
+            "bg_write_bytes": self.sched.core.bg_write_stats(),
             "dropcache": {"size": len(self.dropcache),
                           "inserts": self.dropcache.inserts,
                           "hit_rate": (self.dropcache.hits /
                                        max(1, self.dropcache.queries))},
+            "placement": self.placement.stats(),
         }

@@ -1,39 +1,18 @@
-"""DropCache — LRU of recently-overwritten keys (paper III-B.3).
+"""DropCache — recently-overwritten-key sketch (paper III-B.3).
 
-Compaction observes key drops (an older version being shadowed) and records
-the key here; flush and GC consult membership to route key-value pairs to
-*hot* vs *cold* vSSTs.  ~32 B per entry as in the paper; a Cuckoo-filter
-variant is an easy swap-in if memory mattered at real scale.
+Subsumed by :class:`repro.core.placement.HeatSketch`: the original
+membership-only LRU is the degenerate read of the drop-*count* sketch the
+adaptive placement engine shares with the hot/cold vSST output splitting.
+This module remains as the compatibility name: ``DropCache`` *is* a
+``HeatSketch`` (same capacity semantics, same ``record_drop`` /
+``is_hot`` / ``inserts`` / ``hits`` / ``queries`` surface, ~32 B per
+entry as in the paper).
 """
 
 from __future__ import annotations
 
-from collections import OrderedDict
+from .placement import HeatSketch
 
 
-class DropCache:
-    def __init__(self, capacity: int = 4096) -> None:
-        self.capacity = capacity
-        self._keys: "OrderedDict[bytes, None]" = OrderedDict()
-        self.inserts = 0
-        self.hits = 0
-        self.queries = 0
-
-    def record_drop(self, ukey: bytes) -> None:
-        self.inserts += 1
-        if ukey in self._keys:
-            self._keys.move_to_end(ukey)
-            return
-        self._keys[ukey] = None
-        if len(self._keys) > self.capacity:
-            self._keys.popitem(last=False)
-
-    def is_hot(self, ukey: bytes) -> bool:
-        self.queries += 1
-        if ukey in self._keys:
-            self.hits += 1
-            return True
-        return False
-
-    def __len__(self) -> int:
-        return len(self._keys)
+class DropCache(HeatSketch):
+    pass

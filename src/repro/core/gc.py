@@ -24,9 +24,10 @@ from __future__ import annotations
 from typing import Callable, List, Optional, Tuple
 
 from ..store.device import IOClass
-from ..store.format import (VT_INDEX_KA, VT_INDEX_KF, decode_ka, decode_kf,
-                            encode_ka)
+from ..store.format import (VT_INDEX_KA, VT_INDEX_KF, VT_VALUE, decode_ka,
+                            decode_kf, encode_ka)
 from ..store.tables import LogTableWriter
+from .scheduler import JOB_GC
 from .version import VSSTMeta
 
 
@@ -78,9 +79,14 @@ def run_gc_titan(db, victim: VSSTMeta) -> Callable[[], None]:
             if vfid == victim.fid and voff == off:
                 valid.append((ukey, value, e[3]))
 
-    # (3) Write: rewrite valid records into new blob files.
+    # (3) Write: rewrite valid records into new blob files.  Records the
+    # placement engine wants back inline (small/cold under the current
+    # effective threshold) skip the blob write entirely and ride the
+    # Write-Index step as plain VT_VALUE entries — the sep->inline
+    # migration riding the rewrite GC was doing anyway.
     new_metas: List[VSSTMeta] = []
-    writeback: List[Tuple[bytes, bytes, bytes]] = []  # (key, old KA, new KA)
+    # (key, old KA, vtype, payload-or-value): KA write-back or reattach
+    writeback: List[Tuple[bytes, bytes, int, bytes]] = []
     writer: Optional[LogTableWriter] = None
     wfid: Optional[int] = None
 
@@ -92,35 +98,55 @@ def run_gc_titan(db, victim: VSSTMeta) -> Callable[[], None]:
         writer, wfid = None, None
 
     for ukey, value, old_ka in valid:
+        if db.placement.want_inline_on_gc(ukey, len(value)):
+            writeback.append((ukey, old_ka, VT_VALUE, value))
+            continue
         if writer is None or writer.estimated_bytes >= opts.vsst_bytes:
             _seal()
             wfid = db.device.create()
             writer = LogTableWriter(db.device)
         off, ln = writer.add(ukey, value)
-        writeback.append((ukey, old_ka, encode_ka(wfid, off, ln)))
+        writeback.append((ukey, old_ka, VT_INDEX_KA,
+                          encode_ka(wfid, off, ln)))
     _seal()
 
     def effects(elapsed: float = 0.0) -> None:
-        # (4) Write-Index: push new addresses through the normal write
-        # path (WAL + memtable), charged as GC_WRITE_INDEX.  A key whose
-        # memtable entry changed *relative to the validated address* is
-        # skipped (Titan's WriteCallback sequence check) and its moved
-        # bytes become garbage in the new blob immediately.
+        # (4) Write-Index: push new addresses (or reattached inline
+        # values) through the normal write path (WAL + memtable), charged
+        # as GC_WRITE_INDEX.  A key whose memtable entry changed
+        # *relative to the validated address* is skipped (Titan's
+        # WriteCallback sequence check); a skipped blob move's bytes
+        # become garbage in the new blob immediately, a skipped reattach
+        # simply wrote nothing.
         moved: dict = {}
         for m in new_metas:
             moved[m.fid] = m
-        for ukey, old_ka, payload in writeback:
+        reattached = 0
+        for ukey, old_ka, vtype, payload in writeback:
+            if vtype == VT_VALUE:
+                # Reattached live bytes left the value store but were not
+                # garbage — keep them out of the collected total below.
+                reattached += len(payload)
             cur = db.mem_lookup(ukey)
             if cur is not None and not (cur[1] == VT_INDEX_KA
                                         and cur[2] == old_ka):
-                nfid, _, nln = decode_ka(payload)
-                nm = moved.get(nfid)
-                if nm is not None:
-                    nm.live_value_bytes = max(
-                        0, nm.live_value_bytes - max(0, nln - len(ukey) - 2))
+                if vtype == VT_INDEX_KA:
+                    nfid, _, nln = decode_ka(payload)
+                    nm = moved.get(nfid)
+                    if nm is not None:
+                        nm.live_value_bytes = max(
+                            0, nm.live_value_bytes
+                            - max(0, nln - len(ukey) - 2))
                 continue
-            db.write_index_entry(ukey, VT_INDEX_KA, payload,
+            db.write_index_entry(ukey, vtype, payload,
                                  IOClass.GC_WRITE_INDEX)
+            if vtype == VT_VALUE:
+                db.placement.note_migration(False, len(payload))
+        rewritten = sum(m.total_value_bytes for m in new_metas)
+        db.placement.note_gc(rewritten,
+                             victim.total_value_bytes - rewritten
+                             - reattached)
+        db.sched.note_bg_write(JOB_GC, rewritten)
         vs.log_and_apply({"add_vsst": new_metas, "del_vsst": [victim.fid]})
         db.drop_table(victim.fid)
         db.stats_counters["gc_runs"] += 1
@@ -192,6 +218,26 @@ def run_gc_terark(db, victim: VSSTMeta) -> Callable[[], None]:
                 if ok:
                     valid.append(reader.read_record(off, ln, IOClass.GC_READ))
 
+    # Placement migration (sep->inline), riding the rewrite: records the
+    # engine wants back under the boundary re-enter the index tree as
+    # VT_VALUE entries through the write path (new seq shadows the old
+    # KF entry; the victim's copy dies with the victim).  The stale KF
+    # entry's eventual compaction drop decrements the *successor's* live
+    # counter — the same clamped-at-0 estimation error the hot/cold
+    # split already tolerates in KF accounting.
+    reattached_bytes = 0
+    if opts.adaptive_placement and valid:
+        kept: List[Tuple[bytes, bytes]] = []
+        for ukey, value in valid:
+            if db.placement.want_inline_on_gc(ukey, len(value)):
+                db.write_index_entry(ukey, VT_VALUE, value,
+                                     IOClass.GC_WRITE_INDEX)
+                db.placement.note_migration(False, len(value))
+                reattached_bytes += len(value)
+            else:
+                kept.append((ukey, value))
+        valid = kept
+
     # Write: rewrite valid records, split hot/cold when DropCache is on.
     new_metas: List[VSSTMeta] = []
 
@@ -228,6 +274,11 @@ def run_gc_terark(db, victim: VSSTMeta) -> Callable[[], None]:
                 "regroup": [(victim.fid, [m.fid for m in new_metas])]}
         if new_metas:
             edit["inherit"] = [(victim.fid, new_metas[0].fid)]
+        rewritten = sum(m.total_value_bytes for m in new_metas)
+        db.placement.note_gc(
+            rewritten, victim.total_value_bytes - rewritten
+            - reattached_bytes)
+        db.sched.note_bg_write(JOB_GC, rewritten)
         vs.log_and_apply(edit)
         db.drop_table(victim.fid)
         db.stats_counters["gc_runs"] += 1

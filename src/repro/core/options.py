@@ -57,6 +57,34 @@ class Options:
     dynamic_scheduler: bool = False   # S-AD   (paper III-D)
     dropcache_entries: int = 4096
 
+    # --- adaptive KV placement (core/placement.py) -----------------------
+    # With adaptive_placement on, ``sep_threshold`` is only the *initial*
+    # boundary: the PlacementEngine re-tunes an effective threshold from a
+    # space-vs-write-amp cost model over the observed value-size and
+    # update-rate (churn) histograms, and records migrate lazily on
+    # rewrite — GC reattaches small/cold separated values inline,
+    # compaction re-separates large inline values.  S-ADP ablation switch.
+    adaptive_placement: bool = False
+    # Clamp band for the effective threshold (bytes).
+    placement_min_threshold: int = 64
+    placement_max_threshold: int = 64 * 1024
+    # Observations (value writes + observed overwrites) between cost-model
+    # re-tunes; each retune also decays the histograms by half.
+    placement_retune_interval: int = 1024
+    # Weight of modeled space-overhead bytes against write-amp bytes in
+    # the cost model.  A resident byte is worth several rewritten bytes
+    # by default: the paper evaluates under a 1.5x space *cap* (Fig. 13),
+    # where resident overhead converts directly into write stalls.
+    placement_space_weight: float = 4.0
+    # Migration hysteresis: GC reattaches inline only when size * h <
+    # threshold, compaction re-separates only when size >= threshold * h —
+    # a wiggling boundary must not ping-pong records between homes.
+    placement_hysteresis: float = 2.0
+    # Per-key heat boost: each recent drop of a key doubles its personal
+    # threshold, up to this many doublings (DumpKV's lifetime rule: a
+    # value about to be overwritten is cheapest kept inline).
+    placement_heat_boost: int = 2
+
     # --- sharded front-end: slot routing + online rebalancing ------------
     num_slots: int = 256              # fixed routing slots (keys hash here)
     rebalance: bool = False           # enable the online slot balancer
@@ -79,6 +107,10 @@ class Options:
         assert self.gc_mode in ("standalone", "compaction")
         assert self.num_slots >= 1
         assert self.rebalance_threshold > 1.0
+        assert self.placement_hysteresis >= 1.0
+        assert 0 < self.placement_min_threshold <= self.placement_max_threshold
+        assert self.placement_retune_interval >= 1
+        assert self.placement_heat_boost >= 0
         if self.index_kind == "ka":
             assert self.vsst_format == "log", "KA addressing implies log vSSTs"
         return self
@@ -102,6 +134,10 @@ def preset(name: str, **over) -> Options:
                                ksst_format="dtable", compensated_size=True,
                                dropcache=True, adaptive_readahead=True,
                                dynamic_scheduler=True),
+        "scavenger_plus_adaptive": dict(
+            index_kind="kf", vsst_format="rtable", ksst_format="dtable",
+            compensated_size=True, dropcache=True, adaptive_readahead=True,
+            dynamic_scheduler=True, adaptive_placement=True),
         # -- ablation ladder (paper names) ---------------------------------
         "TDB": dict(index_kind="kf", vsst_format="btable", dca=False),
         "TDB-C": dict(index_kind="kf", vsst_format="btable",
@@ -120,6 +156,10 @@ def preset(name: str, **over) -> Options:
                      ksst_format="dtable", compensated_size=True,
                      dropcache=True, adaptive_readahead=True,
                      dynamic_scheduler=True),
+        "S-ADP": dict(index_kind="kf", vsst_format="rtable",
+                      ksst_format="dtable", compensated_size=True,
+                      dropcache=True, adaptive_readahead=True,
+                      dynamic_scheduler=True, adaptive_placement=True),
     }
     cfg = dict(presets[name])
     cfg.update(over)

@@ -42,7 +42,7 @@ import zlib
 from typing import Dict, Iterator, List, Optional, Set, Tuple
 
 from ..store.device import IOClass
-from ..store.format import VT_DELETE, VT_VALUE
+from ..store.format import VT_DELETE, VT_VALUE, entry_value_size
 from .scheduler import JOB_MIGRATE
 
 DEFAULT_SLOTS = 256
@@ -169,6 +169,36 @@ class Rebalancer:
         old = self._key_bytes.pop(ukey, None)
         if old is not None:
             self.slot_live[slot] -= old
+
+    def seed_from_index(self) -> int:
+        """Rebuild the per-slot live-byte accounting from the recovered
+        index — one recovery-time sweep over each shard's entry streams
+        (keys + entry payloads only; a KF/KA entry carries the value
+        size, so no value reads).  Without this a freshly recovered
+        store reports zero load everywhere and cannot rebalance until
+        new traffic repopulates the counters (ex-ROADMAP open item).
+        Runs synchronously inside recovery — the store is not serving
+        yet, so charging the scan there (GC read class, like every
+        other index sweep) is the cheapest moment it will ever have.
+        Returns the number of live keys seeded."""
+        store = self.store
+        if not store.opts.rebalance:
+            return 0
+        n = 0
+        for shard in store.shards:
+            for e in _newest_per_key(
+                    shard.entry_streams(b"", IOClass.GC_READ)):
+                if e[2] == VT_DELETE:
+                    continue
+                size = len(e[0]) + entry_value_size(e[2], e[3])
+                slot = slot_of(e[0], store.n_slots)
+                old = self._key_bytes.get(e[0])
+                if old is not None:         # seeding is idempotent
+                    self.slot_live[slot] -= old
+                self._key_bytes[e[0]] = size
+                self.slot_live[slot] += size
+                n += 1
+        return n
 
     # -- migration-window routing hooks (active regardless of the policy
     # knob — manual migrations need them too) ---------------------------

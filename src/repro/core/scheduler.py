@@ -124,6 +124,15 @@ class SchedulerCore:
         self.wal_syncs = 0
         self.wal_records = 0
         self.wal_bytes = 0
+        # Cumulative background write bytes per job kind (flush = every
+        # byte the flush job wrote, kSSTs and vSSTs alike).  Unlike the
+        # per-class device stats these are attributed by the *job* that
+        # produced them, so the bench write-amp columns can read per-kind
+        # background volume directly — and for a sharded store they
+        # aggregate across every member of the core.  (The placement cost
+        # model keeps its own per-store, index-only flush counter.)
+        self.bg_write_bytes: Dict[str, int] = {
+            JOB_FLUSH: 0, JOB_COMPACTION: 0, JOB_GC: 0, JOB_MIGRATE: 0}
 
     # -- event pump ------------------------------------------------------
     def push_event(self, when: float, fn: Callable[[], None]) -> None:
@@ -214,9 +223,16 @@ class SchedulerCore:
         self.wal_bytes += nbytes
         self.note_write(nbytes)
 
+    def note_bg_write(self, kind: str, nbytes: int) -> None:
+        """Attribute ``nbytes`` of background output to job ``kind``."""
+        self.bg_write_bytes[kind] = self.bg_write_bytes.get(kind, 0) + nbytes
+
     def wal_stats(self) -> Dict[str, int]:
         return {"syncs": self.wal_syncs, "records": self.wal_records,
                 "bytes": self.wal_bytes}
+
+    def bg_write_stats(self) -> Dict[str, int]:
+        return dict(self.bg_write_bytes)
 
     def govern_bandwidth(self) -> None:
         if not self.opts.dynamic_scheduler:
@@ -306,6 +322,9 @@ class Scheduler:
 
     def note_write(self, nbytes: int) -> None:
         self.core.note_write(nbytes)
+
+    def note_bg_write(self, kind: str, nbytes: int) -> None:
+        self.core.note_bg_write(kind, nbytes)
 
     def govern_bandwidth(self) -> None:
         self.core.govern_bandwidth()

@@ -143,6 +143,14 @@ class ShardedKVStore:
             # may have left orphan copies on its target — sweep them.
             for slot, _src, dst in sb["pending_intents"]:
                 self.rebalancer.clear_aborted(slot, dst)
+            if self.opts.rebalance:
+                # Balancer accounting across restarts (ex-ROADMAP item):
+                # the per-slot live view restarts empty, so seed it with
+                # one background index sweep and let the policy act —
+                # a skewed store can now rebalance straight out of
+                # recovery instead of waiting for new traffic.
+                self.rebalancer.seed_from_index()
+                self.rebalancer.maybe_rebalance()
         self.sched_core.add_waiter(self.rebalancer.maybe_rebalance)
 
     def _shard_cache_budgets(self, n_shards: int) -> List[int]:
@@ -514,6 +522,21 @@ class ShardedKVStore:
                 gc_step[k] = gc_step.get(k, 0.0) + v
         hits = sum(s.cache.hits for s in self.shards)
         queries = sum(s.cache.hits + s.cache.misses for s in self.shards)
+        # Placement: each shard runs its own engine over its own slice of
+        # the key/size population, so tenants with different value-size
+        # mixtures converge to *different* effective thresholds — report
+        # the per-shard boundaries alongside the summed counters.
+        per_pl = [s.placement.stats() for s in self.shards]
+        placement: Dict[str, object] = {
+            k: sum(p[k] for p in per_pl)
+            for k in ("inline_records", "separated_records",
+                      "migr_to_inline_keys", "migr_to_inline_bytes",
+                      "migr_to_sep_keys", "migr_to_sep_bytes", "retunes")}
+        placement["adaptive"] = bool(self.opts.adaptive_placement)
+        placement["per_shard_threshold"] = [p["effective_threshold"]
+                                            for p in per_pl]
+        placement["effective_threshold"] = max(
+            p["effective_threshold"] for p in per_pl)
         return {
             "sim_time_s": self.clock.now,
             "n_shards": self.n_shards,
@@ -525,7 +548,9 @@ class ShardedKVStore:
             "max_gc_threads": self.sched_core.max_gc,
             "gc_bw_fraction": self.sched_core.gc_write_limiter.fraction,
             "wal": self.sched_core.wal_stats(),
+            "bg_write_bytes": self.sched_core.bg_write_stats(),
             "rebalance": self.rebalancer.stats(),
+            "placement": placement,
             "per_shard_counters": [dict(s.stats_counters)
                                    for s in self.shards],
         }

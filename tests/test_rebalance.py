@@ -426,3 +426,44 @@ def test_write_batch_validates_before_commit():
         solo.write_batch([("put", b"a", b"x" * 600), ("nope", b"b")])
     assert solo.get(b"a") is None
     assert solo.sched.core.wal_records == 0
+
+
+def test_recovery_seeds_balancer_accounting_from_index():
+    """ROADMAP 'balancer accounting across restarts': after a crash the
+    per-slot live view restarts empty; recovery seeds it with one index
+    sweep so a skewed store rebalances *before* any new traffic (the
+    skew was written with the balancer off, so only seeding can see
+    it)."""
+    device = BlockDevice()
+    db = ShardedKVStore(preset("scavenger_plus", num_slots=16), n_shards=2,
+                        device=device)
+    kv = {}
+    for i in range(300):
+        k = b"hot%04d" % (i % 5)
+        v = bytes([i % 251]) * 4096
+        db.put(k, v)
+        kv[k] = v
+    db.flush_all()
+    assert db.epoch == 0                   # balancer off: skew untouched
+    rdb = ShardedKVStore(
+        preset("scavenger_plus", num_slots=16, rebalance=True,
+               rebalance_threshold=1.2, rebalance_min_bytes=1024),
+        device=device, recover=True)
+    loads = rdb.rebalancer.shard_loads()
+    assert sum(loads) > 0, "seeding must repopulate the live view"
+    rdb.drain()                            # recovery-proposed move lands
+    st = rdb.stats()["rebalance"]
+    assert st["migrations"] >= 1 and rdb.epoch >= 1
+    _assert_state(rdb, kv)
+
+
+def test_seed_from_index_is_noop_without_balancer():
+    device = BlockDevice()
+    db = ShardedKVStore(preset("scavenger_plus", num_slots=16), n_shards=2,
+                        device=device)
+    _fill(db, n=100, vlen=1024)
+    db.flush_all()
+    rdb = ShardedKVStore(preset("scavenger_plus", num_slots=16),
+                         device=device, recover=True)
+    assert rdb.rebalancer.seed_from_index() == 0
+    assert sum(rdb.rebalancer.shard_loads()) == 0
