@@ -1,0 +1,176 @@
+"""Shared read-cache suite: static per-shard split vs one device-wide
+SharedReadCache with ghost-utility admission quotas (core/cache.py).
+
+Part 1 — two-tenant skew.  Two tenants with equal datasets are pinned to
+the two shards of a ShardedKVStore (keys chosen by slot routing).
+Tenant A cycles uniform point reads over a working set *larger than its
+static half* of the cache but smaller than the whole budget; tenant B
+stays nearly idle.  Under the static even split (``shared_cache=False``,
+the legacy behaviour) tenant A thrashes its slice while B's idles; the
+shared cache grows A's quota from ghost-hit marginal utility and its
+frequency-gated admission keeps the resident set stable under the cyclic
+pattern.  Rows report the aggregate **hit ratio** and **device
+reads/op** at the *same total* ``cache_bytes``; the ``summary`` row
+checks the acceptance shape (shared beats static on both, per-shard
+quotas diverge, quota bytes sum exactly to the budget).  The same
+harness run on ``S-ADP`` vs ``S-CACHE`` gives the ablation pair.
+
+Part 2 — read-aware placement.  A read-heavy fixed-3000B workload run
+with ``placement_read_weight`` on vs off: unabsorbed point-read heat
+must pull the effective separation threshold above the value size (every
+read of a separated value pays a second device hop), the disabled term
+must leave it below — the read-cost knob is toggleable and visible.
+
+Env (see common.py): REPRO_BENCH_FAST
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import fast
+from repro.core import KVStore, ShardedKVStore, preset
+from repro.store.device import BlockDevice, IOClass
+
+
+def _tenant_pools(db: ShardedKVStore, n_keys: int):
+    """Two disjoint key pools, pinned to shards 0/1 by slot routing."""
+    pools = [[], []]
+    i = 0
+    while min(len(p) for p in pools) < n_keys:
+        k = b"c%06d" % i
+        sid = db.shard_of(k)
+        if len(pools[sid]) < n_keys:
+            pools[sid].append(k)
+        i += 1
+    return pools
+
+
+def _skew_run(system: str, cache_bytes: int, n_keys: int, rounds: int,
+              warm: int, **over):
+    """Load two pinned tenants, run the skewed read phase, return
+    (metrics dict) measured after ``warm`` warm-up rounds."""
+    db = ShardedKVStore(preset(system, cache_bytes=cache_bytes,
+                               cache_retune_interval=256, **over),
+                        n_shards=2, device=BlockDevice())
+    pools = _tenant_pools(db, n_keys)
+    for a, b in zip(pools[0], pools[1]):
+        db.put(a, b"v" * 128)
+        db.put(b, b"v" * 128)
+    db.flush_all()
+
+    rng = np.random.default_rng(17)
+
+    def read_round():
+        # hot tenant: the whole working set, random order (no intra-block
+        # sequential locality to hide the thrash) — the adversarial
+        # pattern for an under-quota LRU
+        n = 0
+        for j in rng.permutation(len(pools[0])):
+            db.get(pools[0][j])
+            n += 1
+        for k in pools[1][:20]:         # cold tenant: a trickle
+            db.get(k)
+            n += 1
+        return n
+
+    for _ in range(warm):
+        read_round()
+    st = db.cache.stats()
+    h0, m0 = st["hits"], st["misses"]
+    r0 = db.device.stats.by_class[IOClass.USER_READ].ops
+    t0 = db.clock.now
+    ops = 0
+    for _ in range(rounds - warm):
+        ops += read_round()
+    st = db.cache.stats()
+    hits, misses = st["hits"] - h0, st["misses"] - m0
+    return {
+        "hit": hits / max(1, hits + misses),
+        "dev_reads_per_op":
+            (db.device.stats.by_class[IOClass.USER_READ].ops - r0)
+            / max(1, ops),
+        "us_per_op": 1e6 * (db.clock.now - t0) / max(1, ops),
+        "quotas": st["quota_bytes"],
+        "quota_sum": st["quota_sum_bytes"],
+        "resident": st["resident_bytes"],
+        "capacity": st["capacity_bytes"],
+        "ghost_hits": st["ghost_hits"],
+        "retunes": st["quota_retunes"],
+    }
+
+
+def _fmt_skew(name: str, m: dict) -> str:
+    q = "/".join(str(x) for x in m["quotas"])
+    return (f"cache/{name},{m['us_per_op']:.2f},"
+            f"hit={m['hit']:.3f} dev_reads_per_op="
+            f"{m['dev_reads_per_op']:.3f} quotas={q} "
+            f"quota_sum={m['quota_sum']} resident={m['resident']} "
+            f"ghost_hits={m['ghost_hits']} retunes={m['retunes']}")
+
+
+def _skew_rows() -> list:
+    n_keys = 300 if fast() else 600
+    cache = (48 if fast() else 96) << 10
+    rounds, warm = (8, 3) if fast() else (12, 4)
+    static = _skew_run("scavenger_plus", cache, n_keys, rounds, warm,
+                       shared_cache=False)
+    shared = _skew_run("scavenger_plus", cache, n_keys, rounds, warm,
+                       shared_cache=True)
+    rows = [_fmt_skew("static", static), _fmt_skew("shared", shared)]
+    quota_spread = max(shared["quotas"]) - min(shared["quotas"])
+    ok = int(shared["hit"] > static["hit"]
+             and shared["dev_reads_per_op"] < static["dev_reads_per_op"]
+             and quota_spread > 0
+             and shared["quota_sum"] == shared["capacity"]
+             and static["quota_sum"] == static["capacity"]
+             and shared["resident"] <= shared["capacity"])
+    rows.append(
+        f"cache/summary,0.00,"
+        f"shared_hit={shared['hit']:.3f} static_hit={static['hit']:.3f} "
+        f"shared_dev_reads={shared['dev_reads_per_op']:.3f} "
+        f"static_dev_reads={static['dev_reads_per_op']:.3f} "
+        f"quota_spread={quota_spread} ok={ok}")
+    # ablation pair: the full adaptive system without / with the shared
+    # cache (S-ADP is the previous ladder top; S-CACHE adds only it)
+    for name in ("S-ADP", "S-CACHE"):
+        rows.append(_fmt_skew(name, _skew_run(name, cache, n_keys,
+                                              rounds, warm)))
+    return rows
+
+
+def _read_cost_run(read_weight: float) -> dict:
+    db = KVStore(preset("scavenger_plus_adaptive",
+                        placement_retune_interval=128,
+                        placement_read_weight=read_weight))
+    n_keys = 200 if fast() else 400
+    rounds = 5 if fast() else 7
+    for r in range(rounds):
+        for i in range(n_keys):
+            k = b"h%05d" % i
+            db.put(k, bytes([32 + (r + i) % 64]) * 3000)
+            db.get(k)
+            db.get(b"h%05d" % ((i * 7) % n_keys))
+    db.flush_all()
+    pl = db.stats()["placement"]
+    return {"thr": pl["effective_threshold"],
+            "inline": pl["inline_records"], "sep": pl["separated_records"],
+            "reads": pl["reads_observed"], "mig_in": pl["migr_to_inline_keys"]}
+
+
+def _read_cost_rows() -> list:
+    on = _read_cost_run(1.0)
+    off = _read_cost_run(0.0)
+    ok = int(on["thr"] > 3000 >= off["thr"])
+    return [
+        f"cache/read_cost_on,0.00,thr={on['thr']} inline={on['inline']} "
+        f"sep={on['sep']} reads={on['reads']} mig_in={on['mig_in']}",
+        f"cache/read_cost_off,0.00,thr={off['thr']} inline={off['inline']} "
+        f"sep={off['sep']} reads={off['reads']} mig_in={off['mig_in']}",
+        f"cache/read_cost_summary,0.00,thr_on={on['thr']} "
+        f"thr_off={off['thr']} ok={ok}",
+    ]
+
+
+def run() -> list:
+    return _skew_rows() + _read_cost_rows()

@@ -24,6 +24,9 @@ Suites:
                  under migration, mid-migration crash recovery
   placement      adaptive KV placement: fixed sep_threshold ladder vs
                  adaptive (space amp + write amp), per-shard divergence
+  cache          shared read cache: static split vs shared quotas on a
+                 skewed two-tenant read workload (hit ratio + device
+                 reads/op), S-ADP/S-CACHE ablation, read-cost toggle
   kernels        Pallas kernel micro-costs (interpret mode)
   roofline       dry-run roofline terms (reads dryrun JSON artifacts)
 """
@@ -42,9 +45,9 @@ def main() -> None:
     for a in sys.argv[1:]:
         if a.startswith("--json="):
             json_path = a.split("=", 1)[1]
-    from . import (bench_features, bench_gc_breakdown, bench_micro,
-                   bench_placement, bench_sharded, bench_space_sources,
-                   bench_space_time, bench_ycsb)
+    from . import (bench_cache, bench_features, bench_gc_breakdown,
+                   bench_micro, bench_placement, bench_sharded,
+                   bench_space_sources, bench_space_time, bench_ycsb)
     suites = {
         "space_time": bench_space_time.run,
         "gc_breakdown": bench_gc_breakdown.run,
@@ -55,6 +58,7 @@ def main() -> None:
         "sharded": bench_sharded.run,
         "rebalance": bench_sharded.run_rebalance,
         "placement": bench_placement.run,
+        "cache": bench_cache.run,
     }
     try:
         from . import bench_kernels

@@ -98,3 +98,30 @@ print(f"placement: thr={pl['effective_threshold']}B "
       f"migrated_in={pl['migr_to_inline_keys']} "
       f"migrated_out={pl['migr_to_sep_keys']}")
 assert pl["adaptive"] and pl["retunes"] >= 1
+
+# Shared read cache: the shards of a ShardedKVStore share ONE
+# device-wide cache budget.  With shared_cache on (scavenger_plus_adaptive
+# preset, S-CACHE ablation), per-shard admission quotas re-tune online
+# from ghost-cache utility — a read-hot tenant's slice grows, idle
+# slices shrink — while quota bytes always sum exactly to cache_bytes.
+# The cache also feeds per-size-class read heat into the placement cost
+# model (knob: placement_read_weight; 0 turns the read-cost term off),
+# so frequently point-read small values stay inline and skip the second
+# device hop separated values pay.
+cdb = ShardedKVStore(preset("scavenger_plus_adaptive",
+                            cache_bytes=64 << 10,
+                            cache_retune_interval=256), n_shards=2)
+for i in range(800):
+    cdb.put(b"c%04d" % i, b"v" * 128)
+cdb.flush_all()
+hot = [b"c%04d" % i for i in range(800) if cdb.shard_of(b"c%04d" % i) == 0]
+for r in range(8):                       # shard 0 read-hot, shard 1 idle
+    for k in hot:
+        cdb.get(k)
+cs = cdb.stats()["cache"]
+print(f"cache: quotas={cs['quota_bytes']} (sum={cs['quota_sum_bytes']}) "
+      f"hit={cs['hit_ratio']:.2f} ghost_hits={cs['ghost_hits']} "
+      f"retunes={cs['quota_retunes']}")
+assert cs["quota_sum_bytes"] == 64 << 10
+assert cs["resident_bytes"] <= cs["capacity_bytes"]
+assert cs["quota_bytes"][0] > cs["quota_bytes"][1]

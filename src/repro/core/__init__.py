@@ -10,8 +10,10 @@ Public API::
     db.stats()
 """
 
+from .cache import SharedReadCache
 from .db import KVStore
 from .options import Options, preset
 from .sharded import ShardedKVStore
 
-__all__ = ["KVStore", "Options", "preset", "ShardedKVStore"]
+__all__ = ["KVStore", "Options", "preset", "ShardedKVStore",
+           "SharedReadCache"]

@@ -16,7 +16,6 @@ import heapq as _heapq
 from bisect import bisect_left
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
-from ..store.blocks import BlockCache
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
 from ..store.format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF, VT_VALUE,
                             decode_ka, decode_kf, encode_ka, encode_kf,
@@ -25,6 +24,7 @@ from ..store.memtable import WAL, Memtable
 from ..store.tables import (Entry, KTableReader, KTableWriter, LogTableReader,
                             LogTableWriter, RTableReader, RTableWriter,
                             VBTableReader, VBTableWriter)
+from .cache import ShardCacheHandle, SharedReadCache
 from .commitlog import (GroupCommitLog, MemtableLog, SharedCommitSink,
                         SoloCommitSink)
 from .compaction import execute_compaction, plan_compaction
@@ -63,11 +63,17 @@ class KVStore:
                  sched_core: Optional[SchedulerCore] = None,
                  manifest_fid: int = 1,
                  commit_log: Optional[GroupCommitLog] = None,
-                 shard_tag: int = 0) -> None:
+                 shard_tag: int = 0,
+                 cache: Optional[ShardCacheHandle] = None) -> None:
         self.opts = opts.validate()
         self.device = device or BlockDevice(Clock(), CostModel())
         self.clock = self.device.clock
-        self.cache = BlockCache(opts.cache_bytes)
+        # Block cache: a shard of a ShardedKVStore is handed its view of
+        # the one device-wide SharedReadCache; a standalone store owns a
+        # private single-shard core (ghost admission still applies when
+        # opts.shared_cache is on).
+        self.cache = cache if cache is not None \
+            else SharedReadCache.from_options(opts).handle(0)
         if recover:
             # Crash restart: the manifest of a standalone store is always
             # fid 1 (first file created); a shard inside a ShardedKVStore
@@ -89,6 +95,9 @@ class KVStore:
         # boundary; a no-op stand-in for the static threshold when
         # opts.adaptive_placement is off.
         self.placement = PlacementEngine(opts)
+        # Read-aware placement: the engine drains the cache's
+        # per-size-class read-heat counters at each retune.
+        self.placement.read_heat_source = self.cache
         self.mem = Memtable()
         if recover:
             if commit_log is None:
@@ -329,28 +338,49 @@ class KVStore:
 
     def _resolve_value(self, e: Optional[Entry], cls: IOClass
                        ) -> Optional[bytes]:
+        """Resolve an index entry to its value.  Foreground resolutions
+        (USER_READ) feed the cache's per-size-class read-heat counters:
+        an inline value pays no second hop (and would pay one if it were
+        separated — ``absorbed=False`` is the honest counterfactual,
+        since its bytes are not in the value-block cache today); a
+        separated value's hop is *absorbed* when the value block came
+        out of the cache instead of the device."""
         if e is None:
             return None
         _, _, vtype, payload = e
         if vtype == VT_DELETE:
             return None
         if vtype == VT_VALUE:
+            if cls == IOClass.USER_READ:
+                self.cache.note_value_read(len(payload), absorbed=False)
             return payload
         if vtype == VT_INDEX_KA:
             fid, off, ln = decode_ka(payload)
             if not self.device.exists(fid):
                 return None
-            return self.log_reader(fid).read_record(off, ln, cls)[1]
+            val = self.log_reader(fid).read_record(off, ln, cls)[1]
+            if cls == IOClass.USER_READ:
+                # value logs are read straight off the device, uncached
+                self.cache.note_value_read(len(val), absorbed=False)
+            return val
         # KF: probe the lookup-group candidates (primary first).
         fid, _ = decode_kf(payload)
         for cand in self.versions.lookup_candidates(fid):
             meta = self.versions.vssts.get(cand)
             if meta is None or not self.device.exists(cand):
                 continue
-            rr = (self.r_reader(cand) if meta.fmt == "rtable"
-                  else self.vb_reader(cand))
+            if meta.fmt == "rtable":
+                # dense index partitions are cached, value bytes are a
+                # direct (lazy) device read — never absorbed
+                rr, h0 = self.r_reader(cand), None
+            else:
+                rr, h0 = self.vb_reader(cand), self.cache.hits
             val = rr.get(e[0], cls)
             if val is not None:
+                if cls == IOClass.USER_READ:
+                    self.cache.note_value_read(
+                        len(val),
+                        absorbed=h0 is not None and self.cache.hits > h0)
                 return val
         return None
 
@@ -721,6 +751,9 @@ class KVStore:
             "counters": dict(self.stats_counters),
             "gc_step_time_s": dict(self.gc_step_time),
             "cache_hit_ratio": self.cache.hit_ratio,
+            # This shard's view of the (possibly shared) read cache:
+            # quota, residency, hit/ghost-hit rates, per-class read heat.
+            "cache": self.cache.stats(),
             "pressure_index": p_i,
             "pressure_value": p_v,
             "max_gc_threads": self.sched.max_gc,

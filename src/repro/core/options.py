@@ -84,6 +84,29 @@ class Options:
     # threshold, up to this many doublings (DumpKV's lifetime rule: a
     # value about to be overwritten is cheapest kept inline).
     placement_heat_boost: int = 2
+    # Weight of the read-cost term in the placement model: each measured
+    # point read of a separated value that the cache does not absorb
+    # costs an extra device hop (paper's lazy-read asymmetry, from the
+    # *read* side).  0 disables the term (write/space model only).
+    placement_read_weight: float = 1.0
+
+    # --- shared read cache (core/cache.py) -------------------------------
+    # With shared_cache on, the device-wide cache budget is managed as ONE
+    # SharedReadCache: per-shard admission quotas re-tuned online from
+    # ghost-cache marginal utility (a shard whose ghost hits say "one
+    # more MB would have saved N device reads" grows, idle slices
+    # shrink), frequency-gated admission under pressure, exact
+    # aggregate-budget accounting.  Off = static even split (the legacy
+    # behaviour, and the S-CACHE ablation baseline).
+    shared_cache: bool = False
+    # Ghost (evicted-fingerprint) capacity as a fraction of each shard's
+    # fair share of the budget.
+    cache_ghost_ratio: float = 1.0
+    # Quota clamp band, as fractions of the device-wide budget.
+    cache_quota_floor: float = 0.05
+    cache_quota_ceiling: float = 0.90
+    # Cache lookups between quota re-tunes.
+    cache_retune_interval: int = 2048
 
     # --- sharded front-end: slot routing + online rebalancing ------------
     num_slots: int = 256              # fixed routing slots (keys hash here)
@@ -111,6 +134,10 @@ class Options:
         assert 0 < self.placement_min_threshold <= self.placement_max_threshold
         assert self.placement_retune_interval >= 1
         assert self.placement_heat_boost >= 0
+        assert self.placement_read_weight >= 0.0
+        assert self.cache_ghost_ratio > 0.0
+        assert 0.0 <= self.cache_quota_floor <= self.cache_quota_ceiling <= 1.0
+        assert self.cache_retune_interval >= 1
         if self.index_kind == "ka":
             assert self.vsst_format == "log", "KA addressing implies log vSSTs"
         return self
@@ -137,7 +164,8 @@ def preset(name: str, **over) -> Options:
         "scavenger_plus_adaptive": dict(
             index_kind="kf", vsst_format="rtable", ksst_format="dtable",
             compensated_size=True, dropcache=True, adaptive_readahead=True,
-            dynamic_scheduler=True, adaptive_placement=True),
+            dynamic_scheduler=True, adaptive_placement=True,
+            shared_cache=True),
         # -- ablation ladder (paper names) ---------------------------------
         "TDB": dict(index_kind="kf", vsst_format="btable", dca=False),
         "TDB-C": dict(index_kind="kf", vsst_format="btable",
@@ -160,6 +188,11 @@ def preset(name: str, **over) -> Options:
                       ksst_format="dtable", compensated_size=True,
                       dropcache=True, adaptive_readahead=True,
                       dynamic_scheduler=True, adaptive_placement=True),
+        "S-CACHE": dict(index_kind="kf", vsst_format="rtable",
+                        ksst_format="dtable", compensated_size=True,
+                        dropcache=True, adaptive_readahead=True,
+                        dynamic_scheduler=True, adaptive_placement=True,
+                        shared_cache=True),
     }
     cfg = dict(presets[name])
     cfg.update(over)

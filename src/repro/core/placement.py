@@ -61,6 +61,17 @@ neighbours.  ``Options.placement_space_weight`` trades the two columns —
 its default leans toward space, matching the paper's evaluation under a
 1.5x space cap (Fig. 13) — and the effective threshold is the bucket
 boundary minimizing the population total, EWMA-smoothed against thrash.
+
+The **read-cost term** (per measured point read of the bucket): a
+separated value pays one extra device hop per read unless the shared
+read cache (:mod:`.cache`) absorbs it.  Per record it adds
+``read_weight * reads_per_record * (1 - absorb_ratio) * (s + H +
+READ_HOP_BYTES)`` to the separate column, with the read rate and the
+absorb ratio both *measured* — the cache exports per-size-class
+read-heat counters which the engine drains at each retune.  Hot-read
+small values therefore stay inline (no second hop), and read traffic
+the cache absorbs never argues against separation.
+``Options.placement_read_weight`` scales the term; 0 disables it.
 """
 
 from __future__ import annotations
@@ -148,6 +159,13 @@ class SizeHistogram:
 
 INDEX_ENTRY_BYTES = 12          # KF/KA payload: varint fid + size/offset
 VSST_RECORD_HEADER = 24         # length framing + dense-index slot
+# Byte-equivalent of the extra device *op* a separated point read pays
+# (the second hop into the value store): one block, the unit the rest of
+# the cost model already thinks in.  The real 80 us latency would
+# convert to ~256 KB at device bandwidth and drown every other term;
+# one block keeps the read hop comparable to the write/space columns
+# while still making frequently-read small values expensive to separate.
+READ_HOP_BYTES = 4096
 
 
 class PlacementEngine:
@@ -175,6 +193,13 @@ class PlacementEngine:
         self.heat = HeatSketch(opts.dropcache_entries)
         self.sizes = SizeHistogram()        # sizes written
         self.churn = SizeHistogram()        # sizes overwritten (dropped)
+        self.reads = SizeHistogram()        # sizes point-read (user)
+        self.absorbed = SizeHistogram()     # ... whose hop the cache served
+        # Read-heat provider: the store's shared-cache handle (set by
+        # KVStore).  Drained at each retune so the cost model sees the
+        # measured per-size-class point-read rate and how much of it the
+        # block cache absorbs — the read-cost term's two inputs.
+        self.read_heat_source = None
         self.threshold = opts.sep_threshold
         self.counters: Dict[str, int] = {
             "inline_records": 0, "separated_records": 0,
@@ -301,6 +326,17 @@ class PlacementEngine:
             self._ticks = 0
             self.retune()
 
+    def _pull_read_heat(self) -> None:
+        """Fold the cache's window read-heat counters into the decayed
+        read histograms (the cache counts, we own the decay cadence)."""
+        src = self.read_heat_source
+        if src is None:
+            return
+        r, a = src.drain_read_heat()
+        for b in range(N_BUCKETS):
+            self.reads.counts[b] += r[b]
+            self.absorbed.counts[b] += a[b]
+
     def retune(self) -> None:
         """Re-pick the effective threshold from the cost model (see module
         docstring) over the decayed histograms, then decay them so the
@@ -308,6 +344,7 @@ class PlacementEngine:
         if self.sizes.total < 32:       # not enough signal yet
             return
         self.counters["retunes"] += 1
+        self._pull_read_heat()
         opts = self.opts
         w_amp = self.index_write_amp()
         g_amp = self.gc_rewrite_amp()
@@ -318,6 +355,7 @@ class PlacementEngine:
         rg = opts.garbage_ratio
         blob_res = rg / (1.0 - rg)
         sw = opts.placement_space_weight
+        rw = opts.placement_read_weight
 
         inline_cost = [0.0] * N_BUCKETS
         sep_cost = [0.0] * N_BUCKETS
@@ -334,6 +372,18 @@ class PlacementEngine:
                                + sw * ((entry + key_b) * tree_over
                                        + key_b + hdr
                                        + s * min(u, 2.0) * (blob_res + rg)))
+            # Read-cost term: every measured point read of this size
+            # class that the cache did NOT absorb pays a second device
+            # hop when the value is separated — an inline value rides
+            # the index-block read that happened anyway.  Hot-read small
+            # values therefore stay inline; cache-absorbed read traffic
+            # costs separation nothing.
+            if rw > 0 and self.reads.counts[b] > 0:
+                miss = max(0.0, 1.0 - (self.absorbed.counts[b]
+                                       / self.reads.counts[b]))
+                reads_per_rec = self.reads.counts[b] / n
+                sep_cost[b] += n * rw * reads_per_rec * miss \
+                    * (s + hdr + READ_HOP_BYTES)
 
         # cost(t_i) = inline everything below bucket i, separate the rest;
         # one suffix-sum pass evaluates every boundary.
@@ -355,6 +405,8 @@ class PlacementEngine:
         self.threshold = max(1, int(round(0.5 * self.threshold + 0.5 * raw)))
         self.sizes.decay()
         self.churn.decay()
+        self.reads.decay()
+        self.absorbed.decay()
 
     # -- reporting ---------------------------------------------------------
     def stats(self) -> Dict[str, object]:
@@ -365,5 +417,8 @@ class PlacementEngine:
             "gc_rewrite_amp": round(self.gc_rewrite_amp(), 3),
             "sizes_observed": int(self.sizes.total),
             "churn_observed": int(self.churn.total),
+            "reads_observed": int(self.reads.total),
+            "reads_absorbed": int(self.absorbed.total),
+            "read_weight": self.opts.placement_read_weight,
             **self.counters,
         }

@@ -37,14 +37,17 @@ background-thread pool.  ``ShardedKVStore`` reproduces that topology:
   to their shards by tag (torn tails tolerated everywhere).
 
 Per-shard memtables follow RocksDB column-family semantics (each shard
-owns one); the block-cache budget is divided across shards with the
-remainder granted to shard 0, so the shard budgets sum exactly to the
-configured device-wide budget.
+owns one); the block cache is ONE device-wide
+:class:`~.cache.SharedReadCache` — every shard attaches through a
+:class:`~.cache.ShardCacheHandle`, per-shard admission quotas sum
+exactly to the configured budget, and with ``Options.shared_cache`` on
+the quotas re-tune online from ghost-cache marginal utility (a read-hot
+tenant's slice grows at the expense of idle neighbours; off, the quotas
+stay at the static even split of the pre-shared-cache era).
 """
 
 from __future__ import annotations
 
-import dataclasses
 import heapq as _heapq
 from contextlib import contextmanager
 from typing import (Callable, Dict, Iterable, List, Optional,
@@ -53,6 +56,7 @@ from typing import (Callable, Dict, Iterable, List, Optional,
 import msgpack
 
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
+from .cache import SharedReadCache
 from .commitlog import GroupCommitLog
 from .db import KVStore, validate_batch_ops
 from .options import Options
@@ -101,13 +105,14 @@ class ShardedKVStore:
             pending_cleanup = sb["pending_cleanup"]
             self.commitlog = GroupCommitLog(self.device,
                                             core=self.sched_core)
-            budgets = self._shard_cache_budgets(n_shards)
+            self.cache = SharedReadCache.from_options(opts,
+                                                      n_shards=n_shards)
             for tag, mf in enumerate(sb["manifests"]):
                 self.shards.append(
-                    KVStore(self._shard_opts(budgets[tag]),
-                            device=self.device, recover=True,
+                    KVStore(opts, device=self.device, recover=True,
                             sched_core=self.sched_core, manifest_fid=mf,
-                            commit_log=self.commitlog, shard_tag=tag))
+                            commit_log=self.commitlog, shard_tag=tag,
+                            cache=self.cache.handle(tag)))
             self._replay_segments(n_shards)
         else:
             fid = self.device.create()
@@ -120,12 +125,14 @@ class ShardedKVStore:
             self.n_slots = opts.num_slots
             self.slot_map = default_slot_map(n_shards, self.n_slots)
             self.epoch = 0
-            budgets = self._shard_cache_budgets(n_shards)
+            self.cache = SharedReadCache.from_options(opts,
+                                                      n_shards=n_shards)
             for tag in range(n_shards):
                 self.shards.append(
-                    KVStore(self._shard_opts(budgets[tag]),
-                            device=self.device, sched_core=self.sched_core,
-                            commit_log=self.commitlog, shard_tag=tag))
+                    KVStore(opts, device=self.device,
+                            sched_core=self.sched_core,
+                            commit_log=self.commitlog, shard_tag=tag,
+                            cache=self.cache.handle(tag)))
             self._append_superblock(
                 {"version": 2, "epoch": 0, "n_shards": n_shards,
                  "n_slots": self.n_slots, "slot_map": self.slot_map,
@@ -152,24 +159,6 @@ class ShardedKVStore:
                 self.rebalancer.seed_from_index()
                 self.rebalancer.maybe_rebalance()
         self.sched_core.add_waiter(self.rebalancer.maybe_rebalance)
-
-    def _shard_cache_budgets(self, n_shards: int) -> List[int]:
-        """One cache budget for the whole device, split across shards.
-        Integer division drops up to ``n_shards - 1`` bytes — grant the
-        remainder to shard 0 so the split sums exactly to the configured
-        budget (the sweep must not conflate shard count with a shrinking
-        or growing aggregate cache budget)."""
-        base, rem = divmod(self.opts.cache_bytes, n_shards)
-        budgets = [base + rem] + [base] * (n_shards - 1)
-        assert sum(budgets) == self.opts.cache_bytes, \
-            (budgets, self.opts.cache_bytes)
-        # No per-shard floor: a slice below one block simply caches
-        # nothing (BlockCache drops over-capacity inserts), which keeps
-        # the aggregate exactly at the device-wide budget.
-        return budgets
-
-    def _shard_opts(self, cache_bytes: int) -> Options:
-        return dataclasses.replace(self.opts, cache_bytes=cache_bytes)
 
     def _replay_segments(self, n_shards: int) -> None:
         """Crash recovery: replay interleaved commit-log segments, routing
@@ -520,8 +509,7 @@ class ShardedKVStore:
                 counters[k] = counters.get(k, 0) + v
             for k, v in s.gc_step_time.items():
                 gc_step[k] = gc_step.get(k, 0.0) + v
-        hits = sum(s.cache.hits for s in self.shards)
-        queries = sum(s.cache.hits + s.cache.misses for s in self.shards)
+        cache = self.cache.stats()
         # Placement: each shard runs its own engine over its own slice of
         # the key/size population, so tenants with different value-size
         # mixtures converge to *different* effective thresholds — report
@@ -544,7 +532,10 @@ class ShardedKVStore:
             "io": self.device.stats.snapshot(),
             "counters": counters,
             "gc_step_time_s": gc_step,
-            "cache_hit_ratio": hits / queries if queries else 0.0,
+            "cache_hit_ratio": cache["hit_ratio"],
+            # Device-wide shared-cache view: quotas (sum exactly to the
+            # budget), per-shard residency/hit/ghost-hit rates, read heat.
+            "cache": cache,
             "max_gc_threads": self.sched_core.max_gc,
             "gc_bw_fraction": self.sched_core.gc_write_limiter.fraction,
             "wal": self.sched_core.wal_stats(),

@@ -1,17 +1,20 @@
-"""Block encoding, bloom filters and the priority block cache.
+"""Block encoding, bloom filters and the block-cache view.
 
 The block cache follows RocksDB's two-queue design referenced by the paper
 (Section III-B.2): entries inserted with high priority live in a protected
 region that is evicted only after the low-priority region is exhausted —
 this is what keeps DTable *index-entry blocks* resident across GC-Lookups.
+The cache *implementation* lives in :mod:`repro.core.cache` — one
+device-wide :class:`~repro.core.cache.SharedReadCache` serves every shard
+through per-shard handles; :func:`BlockCache` here is the historical
+single-tenant constructor, now a view over a private one-shard core.
 """
 
 from __future__ import annotations
 
 import hashlib
 import struct
-from collections import OrderedDict
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 
 # --------------------------------------------------------------------------
@@ -105,71 +108,23 @@ class BloomFilter:
 
 
 # --------------------------------------------------------------------------
-# Block cache
+# Block cache (view constructor — the core lives in repro.core.cache)
 # --------------------------------------------------------------------------
 
-class BlockCache:
-    """Byte-capacity LRU with a high-priority protected region.
+def BlockCache(capacity_bytes: int, high_ratio: float = 0.5):
+    """Single-tenant byte-capacity LRU with a high-priority protected
+    region — the historical constructor, kept as the convenient way to
+    build a private cache (tests, standalone table readers).
 
     ``high_ratio`` of the capacity is reserved for high-priority entries
     (index / index-entry blocks).  Low-priority insertions never evict
     high-priority residents; high-priority insertions may evict both.
+
+    Returns a :class:`~repro.core.cache.ShardCacheHandle` over a private
+    one-shard :class:`~repro.core.cache.SharedReadCache` (same surface
+    the old class exposed).  Imported lazily: ``repro.core`` imports this
+    module at package-init time, so a module-level import would cycle.
     """
-
-    def __init__(self, capacity_bytes: int, high_ratio: float = 0.5) -> None:
-        self.capacity = capacity_bytes
-        self.high_capacity = int(capacity_bytes * high_ratio)
-        self._low: "OrderedDict[Tuple[int, int], bytes]" = OrderedDict()
-        self._high: "OrderedDict[Tuple[int, int], bytes]" = OrderedDict()
-        self._low_bytes = 0
-        self._high_bytes = 0
-        self.hits = 0
-        self.misses = 0
-
-    def get(self, key: Tuple[int, int]) -> Optional[bytes]:
-        for q in (self._high, self._low):
-            v = q.get(key)
-            if v is not None:
-                q.move_to_end(key)
-                self.hits += 1
-                return v
-        self.misses += 1
-        return None
-
-    def put(self, key: Tuple[int, int], value: bytes, high_priority: bool = False) -> None:
-        size = len(value)
-        if size > self.capacity:
-            return
-        self.evict_key(key)
-        if high_priority:
-            self._high[key] = value
-            self._high_bytes += size
-            while self._high_bytes > self.high_capacity and self._high:
-                _, v = self._high.popitem(last=False)
-                self._high_bytes -= len(v)
-        else:
-            self._low[key] = value
-            self._low_bytes += size
-        low_cap = self.capacity - self._high_bytes
-        while self._low_bytes > low_cap and self._low:
-            _, v = self._low.popitem(last=False)
-            self._low_bytes -= len(v)
-
-    def evict_key(self, key: Tuple[int, int]) -> None:
-        v = self._low.pop(key, None)
-        if v is not None:
-            self._low_bytes -= len(v)
-        v = self._high.pop(key, None)
-        if v is not None:
-            self._high_bytes -= len(v)
-
-    def evict_file(self, fid: int) -> None:
-        for q, attr in ((self._low, "_low_bytes"), (self._high, "_high_bytes")):
-            dead = [k for k in q if k[0] == fid]
-            for k in dead:
-                setattr(self, attr, getattr(self, attr) - len(q.pop(k)))
-
-    @property
-    def hit_ratio(self) -> float:
-        tot = self.hits + self.misses
-        return self.hits / tot if tot else 0.0
+    from ..core.cache import SharedReadCache
+    return SharedReadCache(capacity_bytes, n_shards=1,
+                           high_ratio=high_ratio).handle(0)

@@ -155,21 +155,23 @@ def test_segments_released_after_flush():
 
 
 def test_cache_budget_split_sums_to_configured_budget():
-    """The block-cache budget split hands the division remainder to shard
-    0 — no silently dropped bytes, aggregate equals the device budget."""
+    """The shared read cache's per-shard quotas hand the division
+    remainder to shard 0 — no silently dropped bytes, the quota
+    aggregate equals the device-wide budget exactly."""
     opts = preset("scavenger_plus", cache_bytes=1_000_003)
     for n in (1, 2, 3, 4, 7):
         db = ShardedKVStore(opts, n_shards=n, device=BlockDevice())
-        got = [s.opts.cache_bytes for s in db.shards]
+        got = list(db.cache.quotas)
         assert sum(got) == 1_000_003, (n, got)
         # shard 0 carries the remainder; every other shard gets the base
         assert got[0] == 1_000_003 // n + 1_000_003 % n
         assert all(b == 1_000_003 // n for b in got[1:])
+        assert [s.cache.capacity for s in db.shards] == got
     # tiny budgets: slices below one block are NOT floored up — the
     # aggregate must still equal the configured budget exactly
     small = preset("scavenger_plus", cache_bytes=16 * 1024)
     db = ShardedKVStore(small, n_shards=8, device=BlockDevice())
-    got = [s.opts.cache_bytes for s in db.shards]
+    got = list(db.cache.quotas)
     assert sum(got) == 16 * 1024, got
     assert all(b < small.block_bytes for b in got[1:])
 
