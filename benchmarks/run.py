@@ -27,6 +27,9 @@ Suites:
   cache          shared read cache: static split vs shared quotas on a
                  skewed two-tenant read workload (hit ratio + device
                  reads/op), S-ADP/S-CACHE ablation, read-cost toggle
+  concurrent     concurrent front-end: N client threads through
+                 write_batch/multi_get — aggregate throughput (sim time),
+                 per-call wall p50/p95/p99, 4-vs-1-thread speedup gate
   kernels        Pallas kernel micro-costs (interpret mode)
   roofline       dry-run roofline terms (reads dryrun JSON artifacts)
 """
@@ -45,9 +48,10 @@ def main() -> None:
     for a in sys.argv[1:]:
         if a.startswith("--json="):
             json_path = a.split("=", 1)[1]
-    from . import (bench_cache, bench_features, bench_gc_breakdown,
-                   bench_micro, bench_placement, bench_sharded,
-                   bench_space_sources, bench_space_time, bench_ycsb)
+    from . import (bench_cache, bench_concurrent, bench_features,
+                   bench_gc_breakdown, bench_micro, bench_placement,
+                   bench_sharded, bench_space_sources, bench_space_time,
+                   bench_ycsb)
     suites = {
         "space_time": bench_space_time.run,
         "gc_breakdown": bench_gc_breakdown.run,
@@ -59,6 +63,7 @@ def main() -> None:
         "rebalance": bench_sharded.run_rebalance,
         "placement": bench_placement.run,
         "cache": bench_cache.run,
+        "concurrent": bench_concurrent.run,
     }
     try:
         from . import bench_kernels

@@ -125,3 +125,33 @@ print(f"cache: quotas={cs['quota_bytes']} (sum={cs['quota_sum_bytes']}) "
 assert cs["quota_sum_bytes"] == 64 << 10
 assert cs["resident_bytes"] <= cs["capacity_bytes"]
 assert cs["quota_bytes"][0] > cs["quota_bytes"][1]
+
+# Concurrent front-end: client threads drive write_batch/multi_get
+# against the same store.  Batches open commit groups on the shared
+# pipeline; whichever thread closes a group first becomes the commit
+# leader and drains every concurrent batch with one coalesced WAL sync,
+# so aggregate syncs/record drop as thread count grows.
+import threading  # noqa: E402
+
+tdb = ShardedKVStore(preset("scavenger_plus"), n_shards=4)
+N_THREADS, PER = 4, 64
+barrier = threading.Barrier(N_THREADS)
+
+def _client(tid):
+    barrier.wait()
+    for i in range(0, PER, 4):
+        tdb.write_batch([("put", b"t%02d-%04d" % (tid, i + j), b"v" * 256)
+                         for j in range(4)])
+
+threads = [threading.Thread(target=_client, args=(t,))
+           for t in range(N_THREADS)]
+for t in threads:
+    t.start()
+for t in threads:
+    t.join()
+got = tdb.multi_get([b"t%02d-%04d" % (t, 0) for t in range(N_THREADS)])
+assert all(v == b"v" * 256 for v in got)
+w = tdb.stats()["wal"]
+print(f"concurrent: {N_THREADS} threads, {w['records']} records in "
+      f"{w['syncs']} wal_syncs ({w['records'] / w['syncs']:.1f} records/sync)")
+assert w["syncs"] < N_THREADS * PER // 4      # cross-thread coalescing

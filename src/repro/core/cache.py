@@ -44,6 +44,7 @@ what the ``S-CACHE`` ablation compares against.
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -66,6 +67,10 @@ class SharedReadCache:
                  quota_ceiling: float = 0.90,
                  retune_interval: int = 2048) -> None:
         assert n_shards >= 1
+        # Leaf mutex (level 3 in the hierarchy, see core.concurrency):
+        # shards on different threads share every structure below.
+        # Reentrant because ``get`` re-tunes quotas on its own cadence.
+        self._mu = threading.RLock()
         self.capacity = capacity_bytes
         self.n_shards = n_shards
         self.high_ratio = high_ratio
@@ -125,71 +130,75 @@ class SharedReadCache:
     # ==================================================================
 
     def get(self, sid: int, key: CacheKey) -> Optional[bytes]:
-        # Re-tune on a lookup cadence, hits included — a long hit-only
-        # stretch must still decay the window counters, or stale hit
-        # history from it would dominate quota decisions long after the
-        # shard went idle.
-        self._lookups_since_retune += 1
-        if self.adaptive and self._lookups_since_retune >= \
-                self.retune_interval:
-            self.retune_quotas()
-        for q in (self._high[sid], self._low[sid]):
-            v = q.get(key)
-            if v is not None:
-                q.move_to_end(key)
-                self.hits[sid] += 1
-                self._w_hits[sid] += 1
-                return v
-        self.misses[sid] += 1
-        if self.adaptive:
-            sz = self._ghost[sid].pop(key, None)
-            if sz is not None:
-                # A ghost hit: the device read about to happen is one a
-                # larger quota would have served from DRAM.
-                self._ghost_bytes[sid] -= sz
-                self._drop_ghost_fid(sid, key)
-                self.ghost_hits[sid] += 1
-                self._w_ghost[sid] += 1
-                if len(self._readmit[sid]) < _READMIT_CAP:
-                    self._readmit[sid].add(key)
-        return None
+        with self._mu:
+            # Re-tune on a lookup cadence, hits included — a long hit-only
+            # stretch must still decay the window counters, or stale hit
+            # history from it would dominate quota decisions long after the
+            # shard went idle.
+            self._lookups_since_retune += 1
+            if self.adaptive and self._lookups_since_retune >= \
+                    self.retune_interval:
+                self.retune_quotas()
+            for q in (self._high[sid], self._low[sid]):
+                v = q.get(key)
+                if v is not None:
+                    q.move_to_end(key)
+                    self.hits[sid] += 1
+                    self._w_hits[sid] += 1
+                    return v
+            self.misses[sid] += 1
+            if self.adaptive:
+                sz = self._ghost[sid].pop(key, None)
+                if sz is not None:
+                    # A ghost hit: the device read about to happen is one a
+                    # larger quota would have served from DRAM.
+                    self._ghost_bytes[sid] -= sz
+                    self._drop_ghost_fid(sid, key)
+                    self.ghost_hits[sid] += 1
+                    self._w_ghost[sid] += 1
+                    if len(self._readmit[sid]) < _READMIT_CAP:
+                        self._readmit[sid].add(key)
+            return None
 
     def put(self, sid: int, key: CacheKey, value: bytes,
             high_priority: bool = False) -> None:
-        size = len(value)
-        quota = self.quotas[sid]
-        readmit = key in self._readmit[sid]
-        if readmit:
-            self._readmit[sid].discard(key)
-        if size > quota:
-            # Over-size for this shard's current slice.  Still leave a
-            # fingerprint (fair-share-sized ghost, see _ghost_put): an
-            # idle shard shrunk to the floor must be able to prove demand
-            # and grow back — re-reads of bypassed blocks are ghost hits.
-            if self.adaptive:
-                self._ghost_put(sid, key, size)
-            return
-        self.evict_key(sid, key)
-        if self.adaptive and not high_priority and not readmit:
-            resident = self._low_bytes[sid] + self._high_bytes[sid]
-            if resident + size > quota:
-                # Admission under pressure is frequency-gated: a block
-                # never seen before (no ghost hit) does not displace the
-                # shard's resident set — it leaves a fingerprint instead,
-                # and its next read within the ghost window admits it.
-                # This is what makes one tenant's long scan unable to
-                # wash out even its *own* hot set, let alone a
-                # neighbour's (theirs is quota-protected anyway).
-                self._ghost_put(sid, key, size)
+        with self._mu:
+            size = len(value)
+            quota = self.quotas[sid]
+            readmit = key in self._readmit[sid]
+            if readmit:
+                self._readmit[sid].discard(key)
+            if size > quota:
+                # Over-size for this shard's current slice.  Still leave a
+                # fingerprint (fair-share-sized ghost, see _ghost_put): an
+                # idle shard shrunk to the floor must be able to prove
+                # demand and grow back — re-reads of bypassed blocks are
+                # ghost hits.
+                if self.adaptive:
+                    self._ghost_put(sid, key, size)
                 return
-        if high_priority:
-            self._high[sid][key] = value
-            self._high_bytes[sid] += size
-        else:
-            self._low[sid][key] = value
-            self._low_bytes[sid] += size
-        self._fid_keys.setdefault(key[0], set()).add((sid, key))
-        self._enforce_quota(sid)
+            self.evict_key(sid, key)
+            if self.adaptive and not high_priority and not readmit:
+                resident = self._low_bytes[sid] + self._high_bytes[sid]
+                if resident + size > quota:
+                    # Admission under pressure is frequency-gated: a block
+                    # never seen before (no ghost hit) does not displace
+                    # the shard's resident set — it leaves a fingerprint
+                    # instead, and its next read within the ghost window
+                    # admits it.  This is what makes one tenant's long
+                    # scan unable to wash out even its *own* hot set, let
+                    # alone a neighbour's (theirs is quota-protected
+                    # anyway).
+                    self._ghost_put(sid, key, size)
+                    return
+            if high_priority:
+                self._high[sid][key] = value
+                self._high_bytes[sid] += size
+            else:
+                self._low[sid][key] = value
+                self._low_bytes[sid] += size
+            self._fid_keys.setdefault(key[0], set()).add((sid, key))
+            self._enforce_quota(sid)
 
     def _enforce_quota(self, sid: int) -> None:
         """Evict (→ ghost) until shard ``sid`` fits its quota: the high
@@ -218,14 +227,15 @@ class SharedReadCache:
     # ==================================================================
 
     def evict_key(self, sid: int, key: CacheKey) -> None:
-        v = self._low[sid].pop(key, None)
-        if v is not None:
-            self._low_bytes[sid] -= len(v)
-            self._drop_fid_key(sid, key)
-        v = self._high[sid].pop(key, None)
-        if v is not None:
-            self._high_bytes[sid] -= len(v)
-            self._drop_fid_key(sid, key)
+        with self._mu:
+            v = self._low[sid].pop(key, None)
+            if v is not None:
+                self._low_bytes[sid] -= len(v)
+                self._drop_fid_key(sid, key)
+            v = self._high[sid].pop(key, None)
+            if v is not None:
+                self._high_bytes[sid] -= len(v)
+                self._drop_fid_key(sid, key)
 
     def evict_file(self, sid: int, fid: int) -> None:
         """Drop every resident block — and every ghost fingerprint — of
@@ -234,18 +244,27 @@ class SharedReadCache:
         fingerprints could never ghost-hit again; left behind they would
         only squat in the bounded ghost window and push out live
         fingerprints right after a compaction/GC wave."""
-        for owner, key in self._fid_keys.pop(fid, ()):
-            v = self._low[owner].pop(key, None)
-            if v is not None:
-                self._low_bytes[owner] -= len(v)
-                continue
-            v = self._high[owner].pop(key, None)
-            if v is not None:
-                self._high_bytes[owner] -= len(v)
-        for owner, key in self._ghost_fids.pop(fid, ()):
-            sz = self._ghost[owner].pop(key, None)
-            if sz is not None:
-                self._ghost_bytes[owner] -= sz
+        with self._mu:
+            for owner, key in self._fid_keys.pop(fid, ()):
+                v = self._low[owner].pop(key, None)
+                if v is not None:
+                    self._low_bytes[owner] -= len(v)
+                    continue
+                v = self._high[owner].pop(key, None)
+                if v is not None:
+                    self._high_bytes[owner] -= len(v)
+            for owner, key in self._ghost_fids.pop(fid, ()):
+                sz = self._ghost[owner].pop(key, None)
+                if sz is not None:
+                    self._ghost_bytes[owner] -= sz
+            # Pending re-admission marks are ghost-hit keys awaiting their
+            # fill ``put``.  A dropped file's fill can never come (fids are
+            # not reused), so stale marks would squat in the capped
+            # (_READMIT_CAP) set and block marks for live blocks.
+            for marks in self._readmit:
+                stale = [k for k in marks if k[0] == fid]
+                for k in stale:
+                    marks.discard(k)
 
     def _drop_fid_key(self, sid: int, key: CacheKey) -> None:
         s = self._fid_keys.get(key[0])
@@ -295,32 +314,35 @@ class SharedReadCache:
         the budget and always sum exactly to it; shrunk shards are
         evicted down immediately so the aggregate-resident invariant
         survives the re-tune itself."""
-        self._lookups_since_retune = 0
-        n = self.n_shards
-        if not self.adaptive or n <= 1:
-            return
-        # Utility: ghost hits are device reads a bigger slice would have
-        # saved; live hits (damped) keep a currently-useful shard from
-        # being raided the moment its ghost goes quiet.
-        w = [self._w_ghost[s] + 0.125 * self._w_hits[s] for s in range(n)]
-        total_w = sum(w)
-        # Window decay (not reset): two quiet windows forget a burst.
-        for s in range(n):
-            self._w_ghost[s] *= 0.5
-            self._w_hits[s] *= 0.5
-        if total_w <= 0:
-            return
-        self.quota_retunes += 1
-        cap = self.capacity
-        floor = min(int(self.quota_floor * cap), cap // n)
-        ceiling = max(int(self.quota_ceiling * cap), -(-cap // n))
-        free = cap - n * floor
-        target = [floor + free * ws / total_w for ws in w]
-        raw = [0.5 * self.quotas[s] + 0.5 * target[s] for s in range(n)]
-        self.quotas = self._normalize(raw, floor, ceiling, cap)
-        assert sum(self.quotas) == cap, (self.quotas, cap)
-        for s in range(n):
-            self._enforce_quota(s)
+        with self._mu:
+            self._lookups_since_retune = 0
+            n = self.n_shards
+            if not self.adaptive or n <= 1:
+                return
+            # Utility: ghost hits are device reads a bigger slice would
+            # have saved; live hits (damped) keep a currently-useful shard
+            # from being raided the moment its ghost goes quiet.
+            w = [self._w_ghost[s] + 0.125 * self._w_hits[s]
+                 for s in range(n)]
+            total_w = sum(w)
+            # Window decay (not reset): two quiet windows forget a burst.
+            for s in range(n):
+                self._w_ghost[s] *= 0.5
+                self._w_hits[s] *= 0.5
+            if total_w <= 0:
+                return
+            self.quota_retunes += 1
+            cap = self.capacity
+            floor = min(int(self.quota_floor * cap), cap // n)
+            ceiling = max(int(self.quota_ceiling * cap), -(-cap // n))
+            free = cap - n * floor
+            target = [floor + free * ws / total_w for ws in w]
+            raw = [0.5 * self.quotas[s] + 0.5 * target[s]
+                   for s in range(n)]
+            self.quotas = self._normalize(raw, floor, ceiling, cap)
+            assert sum(self.quotas) == cap, (self.quotas, cap)
+            for s in range(n):
+                self._enforce_quota(s)
 
     @staticmethod
     def _normalize(raw: List[float], lo: int, hi: int,
@@ -355,31 +377,38 @@ class SharedReadCache:
         ``absorbed`` means the cache served the second hop (the value
         block of a separated record), so separation cost that read
         nothing."""
-        b = bucket_of(size)
-        self._reads[sid][b] += 1
-        self._w_reads[sid][b] += 1
-        if absorbed:
-            self._absorbed[sid][b] += 1
-            self._w_absorbed[sid][b] += 1
+        with self._mu:
+            b = bucket_of(size)
+            self._reads[sid][b] += 1
+            self._w_reads[sid][b] += 1
+            if absorbed:
+                self._absorbed[sid][b] += 1
+                self._w_absorbed[sid][b] += 1
 
     def drain_read_heat(self, sid: int) -> Tuple[List[int], List[int]]:
         """Hand the window's per-size-class (reads, absorbed) counters to
         the caller (the shard's placement engine) and reset the window."""
-        r, a = self._w_reads[sid], self._w_absorbed[sid]
-        self._w_reads[sid] = [0] * N_BUCKETS
-        self._w_absorbed[sid] = [0] * N_BUCKETS
-        return r, a
+        with self._mu:
+            r, a = self._w_reads[sid], self._w_absorbed[sid]
+            self._w_reads[sid] = [0] * N_BUCKETS
+            self._w_absorbed[sid] = [0] * N_BUCKETS
+            return r, a
 
     # ==================================================================
     # Accounting / stats
     # ==================================================================
 
     def resident_bytes(self, sid: Optional[int] = None) -> int:
-        if sid is not None:
-            return self._low_bytes[sid] + self._high_bytes[sid]
-        return sum(self._low_bytes) + sum(self._high_bytes)
+        with self._mu:
+            if sid is not None:
+                return self._low_bytes[sid] + self._high_bytes[sid]
+            return sum(self._low_bytes) + sum(self._high_bytes)
 
     def shard_stats(self, sid: int) -> Dict[str, object]:
+        with self._mu:
+            return self._shard_stats_locked(sid)
+
+    def _shard_stats_locked(self, sid: int) -> Dict[str, object]:
         tot = self.hits[sid] + self.misses[sid]
         reads = sum(self._reads[sid])
         return {
@@ -399,21 +428,24 @@ class SharedReadCache:
         }
 
     def stats(self) -> Dict[str, object]:
-        hits, misses = sum(self.hits), sum(self.misses)
-        tot = hits + misses
-        return {
-            "adaptive": self.adaptive,
-            "capacity_bytes": self.capacity,
-            "resident_bytes": self.resident_bytes(),
-            "quota_bytes": list(self.quotas),
-            "quota_sum_bytes": sum(self.quotas),
-            "quota_retunes": self.quota_retunes,
-            "hits": hits,
-            "misses": misses,
-            "hit_ratio": hits / tot if tot else 0.0,
-            "ghost_hits": sum(self.ghost_hits),
-            "per_shard": [self.shard_stats(s) for s in range(self.n_shards)],
-        }
+        with self._mu:
+            hits, misses = sum(self.hits), sum(self.misses)
+            tot = hits + misses
+            return {
+                "adaptive": self.adaptive,
+                "capacity_bytes": self.capacity,
+                "resident_bytes": (sum(self._low_bytes)
+                                   + sum(self._high_bytes)),
+                "quota_bytes": list(self.quotas),
+                "quota_sum_bytes": sum(self.quotas),
+                "quota_retunes": self.quota_retunes,
+                "hits": hits,
+                "misses": misses,
+                "hit_ratio": hits / tot if tot else 0.0,
+                "ghost_hits": sum(self.ghost_hits),
+                "per_shard": [self._shard_stats_locked(s)
+                              for s in range(self.n_shards)],
+            }
 
 
 class ShardCacheHandle:

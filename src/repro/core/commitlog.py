@@ -10,16 +10,32 @@ foreground half of that fight.  This module extracts WAL ownership out of
 * :class:`SharedCommitSink` — a shard's view over a single
   :class:`GroupCommitLog` shared by every shard of a ``ShardedKVStore``.
   Records are framed with a *shard tag* and interleaved in shared segment
-  files; a ``write_batch`` opens a commit *group* (leader/follower queue:
-  followers enqueue encoded records, the group leader — the outermost
-  ``group()`` frame — drains the queue on exit) so the whole cross-shard
-  batch costs **one** device sync instead of one per record.
+  files.
+
+Both sinks share the :class:`CommitPipeline` leader/follower protocol.  A
+client thread's ``write_batch`` opens a commit *group*: its encoded
+records enqueue (memtable apply proceeds immediately) and the thread
+blocks on the commit condition at group exit until a published *durable
+sequence* covers its last record.  Whichever closing thread finds no
+active leader becomes the leader: it lingers while other groups are still
+open — so the WAL append of batch N overlaps the memtable apply of the
+batches that will ride sync N+0 — then drains the whole queue with one
+coalesced device append and publishes the new durable sequence.  With T
+client threads the steady state coalesces ~T batches per device sync.
 
 Durability ordering is preserved at every boundary that can expose state:
 segment rotation, non-WAL-class appends (Titan GC write-back) and group
 exit all force the pending queue to the device first, so a segment's byte
 order equals per-shard sequence order and crash replay stays a single
 forward pass (torn tails tolerated, exactly like the solo WAL).
+
+Locking (see ``core.concurrency`` for the full hierarchy): the queue
+mutex ``_qmu`` is a leaf — it may be taken while holding the engine lock
+(the drain does: engine -> _qmu -> device append), but a thread holding
+``_qmu`` never blocks on the engine lock; and a thread NEVER waits on the
+commit condition while holding the engine lock, because the leader needs
+the engine lock to drain.  Group exit therefore happens after the per-op
+engine sections inside the batch have been released.
 
 Sync accounting is routed through :class:`~.scheduler.SchedulerCore`
 (``note_wal_sync``) so the bandwidth governor sees a batch as one charged
@@ -29,6 +45,7 @@ sync, not N appends — and so benchmarks can report ``wal_syncs/op``.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from contextlib import contextmanager
 from typing import Callable, Iterator, List, Optional, Tuple
 
@@ -50,22 +67,163 @@ class MemtableLog:
     fids: List[int] = dataclasses.field(default_factory=list)
 
 
-class SoloCommitSink:
+class CommitPipeline:
+    """Leader/follower commit queue shared by both sinks.
+
+    State machine (all queue state guarded by the leaf mutex ``_qmu``):
+
+    * ``_enq`` — records enqueued ever; a thread's *ticket* is the value
+      of ``_enq`` after its last enqueue (or ``_durable`` at group open,
+      so read-only groups exit without waiting).
+    * ``_durable`` — published durable sequence.  The drain is atomic
+      under ``engine + _qmu``: it pops the whole queue, writes one
+      coalesced append, then publishes ``_durable = _enq`` (nobody can
+      enqueue while ``_qmu`` is held, so queue-empty implies covered).
+      On a device error the popped records are re-queued so a later
+      drain retries them — no silent loss.
+    * ``_open_groups`` / ``_leader_active`` — a closing thread whose
+      ticket is not yet durable becomes leader iff no leader is active;
+      the leader lingers while groups are still open (their appends ride
+      this sync — the pipelining overlap), then drains.  Everyone else
+      waits on ``_qcond`` holding only ``_qmu`` (and possibly a shard
+      latch / routing read hold — never the engine lock).
+
+    Termination: open groups belong to threads actively executing batch
+    bodies (they never wait on ``_qcond`` mid-group), every close
+    notifies, and the linger wait carries a timeout as a backstop.
+    """
+
+    #: Leader commit delay once >1 client thread has been seen: one timed
+    #: wait per round lets concurrently-running clients (who may not have
+    #: reached their group yet — the GIL runs threads in long slices) land
+    #: their batches in this sync.  Single-threaded pipelines never wait.
+    LINGER_S = 0.0002
+
+    def _pipeline_init(self, core) -> None:
+        self.core = core                     # SchedulerCore (sync accounting)
+        self._qmu = threading.Lock()
+        self._qcond = threading.Condition(self._qmu)
+        self._queue: List[bytes] = []        # encoded records awaiting sync
+        self._queue_records = 0
+        self._enq = 0
+        self._durable = 0
+        self._open_groups = 0
+        self._leader_active = False
+        self._client_idents: set = set()     # threads that opened groups
+        self._mt = False                     # >1 client thread ever seen
+        self._tls = threading.local()
+        # The engine lock serializes the device append; a core-less
+        # pipeline (unit tests) gets a private stand-in.
+        self._engine = (core.engine_lock if core is not None
+                        else threading.RLock())
+
+    def _drain_write(self, recs: List[bytes], n: int) -> None:
+        raise NotImplementedError
+
+    # -- groups ----------------------------------------------------------
+    @contextmanager
+    def group(self):
+        """Open a commit group.  Nested frames are free riders; only the
+        outermost frame's exit takes part in the leader/follower commit."""
+        depth = getattr(self._tls, "depth", 0)
+        self._tls.depth = depth + 1
+        if depth == 0:
+            with self._qmu:
+                self._open_groups += 1
+                self._tls.ticket = self._durable
+                if not self._mt:
+                    self._client_idents.add(threading.get_ident())
+                    self._mt = len(self._client_idents) > 1
+        try:
+            yield self
+        finally:
+            self._tls.depth -= 1
+            if self._tls.depth == 0:
+                self._group_exit()
+
+    @property
+    def in_group(self) -> bool:
+        return getattr(self._tls, "depth", 0) > 0
+
+    def _enqueue(self, rec: bytes) -> None:
+        with self._qmu:
+            self._queue.append(rec)
+            self._queue_records += 1
+            self._enq += 1
+            self._tls.ticket = self._enq
+
+    def _drain_locked(self) -> None:
+        """Pop + write + publish.  Caller holds engine AND ``_qmu``."""
+        if not self._queue:
+            return
+        recs, n = self._queue, self._queue_records
+        self._queue, self._queue_records = [], 0
+        try:
+            self._drain_write(recs, n)
+        except BaseException:
+            # Put them back: a later drain (or the next leader) retries.
+            self._queue[:0] = recs
+            self._queue_records += n
+            raise
+        self._durable = self._enq
+        self._qcond.notify_all()
+
+    def sync(self) -> None:
+        """Make everything enqueued so far durable (one coalesced append).
+        Safe to call while already holding the engine lock (reentrant)."""
+        with self._engine:
+            with self._qmu:
+                self._drain_locked()
+
+    def _group_exit(self) -> None:
+        with self._qmu:
+            self._open_groups -= 1
+            self._qcond.notify_all()
+            while True:
+                if self._durable >= self._tls.ticket:
+                    return               # someone else's sync covered us
+                if not self._leader_active:
+                    self._leader_active = True
+                    break                # we lead this commit round
+                self._qcond.wait()       # follower: leader will publish
+            # Leader linger: while other groups are still open their
+            # records are still arriving; wait so they ride this sync
+            # (batch N's append overlaps batch N+1's memtable apply).
+            # With multiple client threads, linger one extra beat even
+            # with no group open — peers may not have reached theirs yet
+            # (the GIL schedules threads in multi-ms slices; the timed
+            # wait yields it so they enqueue and park as followers) —
+            # and keep lingering while records are still landing.
+            if self._mt:
+                while True:
+                    enq0 = self._enq
+                    self._qcond.wait(timeout=self.LINGER_S)
+                    if self._enq == enq0 and self._open_groups == 0:
+                        break
+            else:
+                while self._open_groups > 0:
+                    self._qcond.wait(timeout=0.05)
+        try:
+            self.sync()
+        finally:
+            with self._qmu:
+                self._leader_active = False
+                self._qcond.notify_all()
+
+
+class SoloCommitSink(CommitPipeline):
     """Standalone-store WAL semantics behind the sink interface: one file
-    per memtable, one device append (≈ one sync) per record — plus a
-    *private* commit group for ``KVStore.write_batch``: inside a
-    :meth:`group` frame, encoded records queue and the leader drains them
-    with one coalesced append on exit, so a solo store amortizes WAL syncs
-    the same way the shards of a sharded store do."""
+    per memtable, one device append (≈ one sync) per record — plus the
+    :class:`CommitPipeline` commit group for ``KVStore.write_batch``:
+    inside a :meth:`group` frame, encoded records queue and the commit
+    leader drains them with one coalesced append, so a solo store
+    amortizes WAL syncs the same way the shards of a sharded store do."""
 
     def __init__(self, device: BlockDevice, core=None) -> None:
         self.device = device
-        self.core = core                     # SchedulerCore (sync accounting)
         self.on_open: Optional[Callable[[int], None]] = None
         self._wal: Optional[WAL] = None
-        self._pending: List[bytes] = []      # encoded records awaiting sync
-        self._pending_records = 0
-        self._group_depth = 0
+        self._pipeline_init(core)
 
     def start(self) -> None:
         self._open()
@@ -75,120 +233,92 @@ class SoloCommitSink:
         if self.on_open is not None:
             self.on_open(self._wal.fid)
 
-    @contextmanager
-    def group(self):
-        """Open a commit group.  Nested frames are followers — only the
-        outermost (the leader) drains the queue with one device sync."""
-        self._group_depth += 1
-        try:
-            yield self
-        finally:
-            self._group_depth -= 1
-            if self._group_depth == 0:
-                self.sync()
-
     def append(self, ukey: bytes, seq: int, vtype: int, payload: bytes,
                cls: IOClass = IOClass.WAL) -> None:
-        if self._group_depth > 0 and cls == IOClass.WAL:
-            self._pending.append(encode_wal_record(ukey, seq, vtype,
-                                                   payload))
-            self._pending_records += 1
+        if self.in_group and cls == IOClass.WAL:
+            self._enqueue(encode_wal_record(ukey, seq, vtype, payload))
             return
         # Out-of-band class (Titan GC write-back) or no group open: flush
         # the queue first so file byte order equals sequence order.
-        self.sync()
-        nbytes = self._wal.append(ukey, seq, vtype, payload, cls)
-        # Only foreground WAL commits count as syncs; out-of-band classes
-        # (Titan GC write-back) are charged to their own I/O class and
-        # governed by the GC limiters already.
-        if self.core is not None and cls == IOClass.WAL:
-            self.core.note_wal_sync(nbytes, 1)
+        with self._engine:
+            with self._qmu:
+                self._drain_locked()
+            nbytes = self._wal.append(ukey, seq, vtype, payload, cls)
+            # Only foreground WAL commits count as syncs; out-of-band
+            # classes are charged to their own I/O class and governed by
+            # the GC limiters already.
+            if self.core is not None and cls == IOClass.WAL:
+                self.core.note_wal_sync(nbytes, 1)
 
-    def sync(self) -> None:
-        """Drain the pending queue with one coalesced device append."""
-        if not self._pending:
-            return
-        buf = b"".join(self._pending)
-        n = self._pending_records
-        self._pending, self._pending_records = [], 0
+    def _drain_write(self, recs: List[bytes], n: int) -> None:
+        buf = b"".join(recs)
         self.device.append(self._wal.fid, buf, IOClass.WAL)
         if self.core is not None:
             self.core.note_wal_sync(len(buf), n)
 
     def rotate(self) -> MemtableLog:
-        self.sync()          # pending records belong to the old file
-        handle = MemtableLog([self._wal.fid])
-        self._open()
-        return handle
+        with self._engine:
+            self.sync()      # pending records belong to the old file
+            handle = MemtableLog([self._wal.fid])
+            self._open()
+            return handle
 
     def flushed(self, handle: MemtableLog) -> None:
         for fid in handle.fids:
             self.device.delete(fid)
 
 
-class GroupCommitLog:
+class GroupCommitLog(CommitPipeline):
     """One write-ahead log shared by every shard of a sharded store.
 
     Records are framed ``varint(shard_tag) + wal_record`` and appended to
-    the *active segment*.  Inside a commit group, encoded records queue in
-    ``_pending`` and the leader issues a single coalesced device append on
-    group exit; outside a group each record is appended (synced)
-    immediately, preserving single-op durability semantics.
+    the *active segment*.  Inside a commit group, encoded records queue
+    and the commit leader issues a single coalesced device append;
+    outside a group each record is appended (synced) immediately,
+    preserving single-op durability semantics.
 
     Segment lifecycle mirrors RocksDB's shared WAL across column families:
     any shard's memtable rotation rotates the segment, and a segment is
     deleted once every memtable holding records in it has flushed
     (refcounts via :meth:`retain`/:meth:`release`; the active segment is
-    never deleted).
+    never deleted).  ``active_fid``, the refcounts and rotation are all
+    engine-lock state: append/retain run under the caller's foreground
+    engine section, release under flush effects inside ``pump``.
     """
 
     def __init__(self, device: BlockDevice, core=None) -> None:
         self.device = device
-        self.core = core
         self.active_fid = device.create()
         self._refs: dict = {}                # segment fid -> live handles
-        self._pending: List[bytes] = []      # encoded records awaiting sync
-        self._pending_records = 0
-        self._group_depth = 0
         self.syncs = 0
         self.records = 0
         self.bytes = 0
-
-    # -- commit groups (leader/follower queue) --------------------------
-    @contextmanager
-    def group(self):
-        """Open a commit group.  Nested frames are followers — only the
-        outermost (the leader) drains the queue with one device sync."""
-        self._group_depth += 1
-        try:
-            yield self
-        finally:
-            self._group_depth -= 1
-            if self._group_depth == 0:
-                self.sync()
+        self._pipeline_init(core)
 
     def append(self, shard_tag: int, ukey: bytes, seq: int, vtype: int,
                payload: bytes, cls: IOClass = IOClass.WAL) -> int:
-        """Append one framed record; returns the segment fid it targets."""
+        """Append one framed record; returns the segment fid it targets.
+
+        Callers hold the engine lock (foreground op or job body), so the
+        active segment cannot rotate under the returned fid: a queued
+        record is physically drained into its segment before any rotation
+        swaps ``active_fid`` (rotation syncs first)."""
         rec = encode_varint(shard_tag) + encode_wal_record(
             ukey, seq, vtype, payload)
-        if self._group_depth > 0 and cls == IOClass.WAL:
-            self._pending.append(rec)
-            self._pending_records += 1
+        if self.in_group and cls == IOClass.WAL:
+            self._enqueue(rec)
         else:
             # Out-of-band class (e.g. Titan GC write-back) or no group
             # open: flush the queue first so segment byte order equals
             # per-shard sequence order, then write through.
-            self.sync()
-            self._write_out([rec], 1, cls)
+            with self._engine:
+                with self._qmu:
+                    self._drain_locked()
+                    self._write_out([rec], 1, cls)
         return self.active_fid
 
-    def sync(self) -> None:
-        """Drain the pending queue with one coalesced device append."""
-        if self._pending:
-            recs, n = self._pending, self._pending_records
-            self._pending, self._pending_records = [], 0
-            self._write_out(recs, n, IOClass.WAL)
+    def _drain_write(self, recs: List[bytes], n: int) -> None:
+        self._write_out(recs, n, IOClass.WAL)
 
     def _write_out(self, recs: List[bytes], n: int, cls: IOClass) -> None:
         buf = b"".join(recs)
@@ -219,12 +349,13 @@ class GroupCommitLog:
     def rotate_segment(self) -> int:
         """Start a new segment (any shard's memtable rotation lands here).
         Pending records are synced first — they belong to the old extent."""
-        self.sync()
-        old = self.active_fid
-        self.active_fid = self.device.create()
-        if self._refs.get(old, 0) <= 0:
-            self._drop(old)
-        return self.active_fid
+        with self._engine:
+            self.sync()
+            old = self.active_fid
+            self.active_fid = self.device.create()
+            if self._refs.get(old, 0) <= 0:
+                self._drop(old)
+            return self.active_fid
 
     def _drop(self, fid: int) -> None:
         self._refs.pop(fid, None)
@@ -263,7 +394,9 @@ class SharedCommitSink:
     records in; the first record into a segment retains it and fires
     ``on_open`` so the shard's manifest can log the dependency (the same
     ``{"wal": fid}`` edit a solo store writes, now possibly several per
-    memtable)."""
+    memtable).  The handle is engine-lock state: appends happen inside
+    the owning shard's foreground engine section, rotation inside the
+    shard's ``_rotate_memtable`` (also under the engine lock)."""
 
     def __init__(self, log: GroupCommitLog, shard_tag: int) -> None:
         self.log = log

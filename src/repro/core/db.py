@@ -13,7 +13,9 @@ completes, and write stalls advance the clock to the next completion.
 from __future__ import annotations
 
 import heapq as _heapq
+import threading
 from bisect import bisect_left
+from contextlib import contextmanager
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
@@ -74,15 +76,23 @@ class KVStore:
         # opts.shared_cache is on).
         self.cache = cache if cache is not None \
             else SharedReadCache.from_options(opts).handle(0)
+        # Per-shard foreground latch (level 1 of the lock hierarchy, see
+        # core.concurrency): serializes client threads on this store's
+        # memtable/sink state.  Reentrant so write_batch can hold it
+        # across its per-op calls.
+        self.latch = threading.RLock()
         if recover:
             # Crash restart: the manifest of a standalone store is always
             # fid 1 (first file created); a shard inside a ShardedKVStore
             # is handed its manifest fid from the superblock.  Replay it,
-            # then the last WAL (torn tail tolerated).
-            self.device.charge_time = False
-            self.versions = VersionSet(self.device, opts.num_levels,
-                                       manifest_fid=manifest_fid)
-            self.versions.recover()
+            # then the last WAL (torn tail tolerated).  The time_free
+            # window keeps replay I/O off the simulated clock and is
+            # exception-safe (a corrupt manifest cannot leave time
+            # charging disabled).
+            with self.device.time_free():
+                self.versions = VersionSet(self.device, opts.num_levels,
+                                           manifest_fid=manifest_fid)
+                self.versions.recover()
         else:
             self.versions = VersionSet(self.device, opts.num_levels)
         self.sched = Scheduler(self.clock, self.device, opts,
@@ -99,10 +109,11 @@ class KVStore:
         # per-size-class read-heat counters at each retune.
         self.placement.read_heat_source = self.cache
         self.mem = Memtable()
-        if recover:
-            if commit_log is None:
-                # Replay every WAL logged since the last completed flush,
-                # in order (earlier seqs overwritten by later ones).
+        if recover and commit_log is None:
+            # Replay every WAL logged since the last completed flush,
+            # in order (earlier seqs overwritten by later ones).  Replay
+            # I/O is off the clock; exception-safe via time_free.
+            with self.device.time_free():
                 for wal_fid in list(self.versions.pending_wals):
                     if not self.device.exists(wal_fid):
                         continue
@@ -112,10 +123,10 @@ class KVStore:
                         self.versions.seq = max(self.versions.seq, seq)
                     self.device.delete(wal_fid)
                 self.versions.pending_wals.clear()
-            # else: pending segments interleave records from every shard —
-            # the owning ShardedKVStore replays them once, routing records
-            # by shard tag, then clears the pending lists.
-            self.device.charge_time = True
+        # else (recover with a shared commit_log): pending segments
+        # interleave records from every shard — the owning ShardedKVStore
+        # replays them once, routing records by shard tag, then clears
+        # the pending lists.
         # Commit sink: solo stores keep per-memtable WAL files with one
         # append per record; shards of a sharded store write framed,
         # shard-tagged records through one shared GroupCommitLog.
@@ -145,30 +156,53 @@ class KVStore:
     # Write path
     # ==================================================================
 
+    @contextmanager
+    def _fg(self):
+        """One foreground op's lock span: shard latch (level 1), then the
+        engine lock (level 2) for the op's whole clock/IO/state mutation.
+        Never acquire the latch while holding the engine lock (background
+        job bodies and event effects run engine-only for exactly that
+        reason — see write_index_entry)."""
+        with self.latch:
+            with self.sched.core.engine_lock:
+                yield
+
     def put(self, ukey: bytes, value: bytes) -> None:
-        self._write(ukey, VT_VALUE, value)
-        self.stats_counters["puts"] += 1
+        with self._fg():
+            self._write(ukey, VT_VALUE, value)
+            self.stats_counters["puts"] += 1
 
     def delete(self, ukey: bytes) -> None:
-        self._write(ukey, VT_DELETE, b"")
-        self.stats_counters["deletes"] += 1
+        with self._fg():
+            self._write(ukey, VT_DELETE, b"")
+            self.stats_counters["deletes"] += 1
 
     def write_batch(self, ops) -> None:
         """Apply ('put', k, v) / ('del', k) ops under one commit group on
-        the store's private sink: records queue and the group leader
+        the store's private sink: records queue and the commit leader
         drains them with a single coalesced WAL append — one sync per
         batch instead of one per record, the solo-store counterpart of the
         sharded cross-shard group commit (visible in ``stats()["wal"]``).
 
         Ops are validated *before* the group opens so a malformed batch
-        is rejected whole, with nothing queued or applied."""
+        is rejected whole, with nothing queued or applied.
+
+        Lock shape: the group is the *outermost* frame — the latch is
+        released before group exit, which may block on the commit
+        condition, so concurrent batches on other threads can apply to
+        the memtable (taking the latch and per-op engine sections) while
+        this one waits for the leader: that is the pipelining overlap,
+        and it is also why a thread never waits on the commit condition
+        holding the latch or the engine lock (the commit leader needs
+        the engine lock to drain)."""
         ops = validate_batch_ops(ops)
         with self.sink.group():
-            for op in ops:
-                if op[0] == "put":
-                    self.put(op[1], op[2])
-                else:
-                    self.delete(op[1])
+            with self.latch:
+                for op in ops:
+                    if op[0] == "put":
+                        self.put(op[1], op[2])
+                    else:
+                        self.delete(op[1])
 
     def multi_get(self, keys) -> List[Optional[bytes]]:
         """Point-read a batch of keys; results align with ``keys``."""
@@ -212,12 +246,17 @@ class KVStore:
 
     def write_index_entry(self, ukey: bytes, vtype: int, payload: bytes,
                           cls: IOClass) -> None:
-        """Internal write used by Titan-style GC Write-Index."""
-        self.versions.seq += 1
-        self.sink.append(ukey, self.versions.seq, vtype, payload, cls)
-        self.mem.put(ukey, self.versions.seq, vtype, payload)
-        if self.mem.approx_bytes >= self.opts.memtable_bytes:
-            self._rotate_memtable()
+        """Internal write used by Titan-style GC Write-Index (and the
+        migration catch-up copy).  Engine lock only — callers are job
+        bodies or event effects already inside the engine section, and
+        taking the shard latch here would invert the latch -> engine
+        order a foreground op on this shard may hold."""
+        with self.sched.core.engine_lock:
+            self.versions.seq += 1
+            self.sink.append(ukey, self.versions.seq, vtype, payload, cls)
+            self.mem.put(ukey, self.versions.seq, vtype, payload)
+            if self.mem.approx_bytes >= self.opts.memtable_bytes:
+                self._rotate_memtable()
 
     def _rotate_memtable(self) -> None:
         handle = self.sink.rotate()
@@ -329,12 +368,13 @@ class KVStore:
         present with value ``None``.  The sharded front-end uses the
         presence bit to dual-route reads during a slot migration (a
         source tombstone must win over a stale copy on the target)."""
-        self.sched.pump()
-        self.stats_counters["gets"] += 1
-        e = self.get_entry(ukey, IOClass.USER_READ)
-        if e is None:
-            return False, None
-        return True, self._resolve_value(e, IOClass.USER_READ)
+        with self._fg():
+            self.sched.pump()
+            self.stats_counters["gets"] += 1
+            e = self.get_entry(ukey, IOClass.USER_READ)
+            if e is None:
+                return False, None
+            return True, self._resolve_value(e, IOClass.USER_READ)
 
     def _resolve_value(self, e: Optional[Entry], cls: IOClass
                        ) -> Optional[bytes]:
@@ -422,24 +462,26 @@ class KVStore:
         filters *keys* before their value is resolved — the sharded
         front-end passes a routing filter here so migration copies and
         orphans neither cost value reads nor consume the budget."""
-        self.sched.pump()
-        self.stats_counters["scans"] += 1
-        out: List[Tuple[bytes, bytes]] = []
-        prev: Optional[bytes] = None
-        for e in _heapq.merge(*self.entry_streams(start, IOClass.USER_READ),
-                              key=lambda e: (e[0], -e[1])):
-            if e[0] == prev:
-                continue
-            prev = e[0]
-            if accept is not None and not accept(e[0]):
-                continue
-            val = self._resolve_value(e, IOClass.USER_READ)
-            if val is None:
-                continue
-            out.append((e[0], val))
-            if len(out) >= count:
-                break
-        return out
+        with self._fg():
+            self.sched.pump()
+            self.stats_counters["scans"] += 1
+            out: List[Tuple[bytes, bytes]] = []
+            prev: Optional[bytes] = None
+            for e in _heapq.merge(*self.entry_streams(start,
+                                                      IOClass.USER_READ),
+                                  key=lambda e: (e[0], -e[1])):
+                if e[0] == prev:
+                    continue
+                prev = e[0]
+                if accept is not None and not accept(e[0]):
+                    continue
+                val = self._resolve_value(e, IOClass.USER_READ)
+                if val is None:
+                    continue
+                out.append((e[0], val))
+                if len(out) >= count:
+                    break
+            return out
 
     def _level_stream(self, files: List[FileMeta], start: bytes,
                       cls: IOClass = IOClass.USER_READ) -> Iterator[Entry]:
@@ -723,12 +765,17 @@ class KVStore:
 
     def flush_all(self) -> None:
         """Force-rotate the active memtable and flush everything."""
-        if len(self.mem):
-            self._rotate_memtable()
-        self.maybe_schedule_background()
+        with self._fg():
+            if len(self.mem):
+                self._rotate_memtable()
+            self.maybe_schedule_background()
         self.drain()
 
     def space_usage(self) -> Dict[str, float]:
+        with self.sched.core.engine_lock:
+            return self._space_usage_locked()
+
+    def _space_usage_locked(self) -> Dict[str, float]:
         tot_v, live_v = self.versions.value_stats()
         lvl = self.versions.index_level_sizes()
         return {
@@ -743,10 +790,14 @@ class KVStore:
         }
 
     def stats(self) -> Dict[str, object]:
+        with self.sched.core.engine_lock:
+            return self._stats_locked()
+
+    def _stats_locked(self) -> Dict[str, object]:
         p_i, p_v = self.pressures()
         return {
             "sim_time_s": self.clock.now,
-            "space": self.space_usage(),
+            "space": self._space_usage_locked(),
             "io": self.device.stats.snapshot(),
             "counters": dict(self.stats_counters),
             "gc_step_time_s": dict(self.gc_step_time),

@@ -38,6 +38,7 @@ fitting slot from the most- to the least-loaded shard, one slot at a time.
 from __future__ import annotations
 
 import heapq as _heapq
+import threading
 import zlib
 from typing import Dict, Iterator, List, Optional, Set, Tuple
 
@@ -127,6 +128,13 @@ class Rebalancer:
         self.slot_live = [0] * store.n_slots     # approx live bytes by slot
         self._key_bytes: Dict[bytes, int] = {}   # key -> last live size
         self._deferred: List = []                # commits parked by the guard
+        # Leaf mutexes (level 3, see core.concurrency): _acct_mu guards
+        # the per-slot accounting and window-delete sets (mutated by
+        # routed ops on any client thread); _defer_mu guards the deferred
+        # -commit list (appended under pump, drained at guard exit).
+        # Neither is ever held across an acquire of a higher-level lock.
+        self._acct_mu = threading.Lock()
+        self._defer_mu = threading.Lock()
         # Keys of an in-flight slot whose *final* user op in the
         # migration window was a delete (a put discards the key again).
         # Compaction may drop a bottom-level tombstone before the commit
@@ -155,20 +163,22 @@ class Rebalancer:
     def note_put(self, slot: int, ukey: bytes, nbytes: int) -> None:
         if not self.store.opts.rebalance:
             return
-        self.slot_bytes[slot] += nbytes
-        old = self._key_bytes.get(ukey)
-        if old is not None:
-            self.slot_live[slot] -= old
-        self._key_bytes[ukey] = nbytes
-        self.slot_live[slot] += nbytes
+        with self._acct_mu:
+            self.slot_bytes[slot] += nbytes
+            old = self._key_bytes.get(ukey)
+            if old is not None:
+                self.slot_live[slot] -= old
+            self._key_bytes[ukey] = nbytes
+            self.slot_live[slot] += nbytes
 
     def note_delete(self, slot: int, ukey: bytes) -> None:
         if not self.store.opts.rebalance:
             return
-        self.slot_bytes[slot] += len(ukey)
-        old = self._key_bytes.pop(ukey, None)
-        if old is not None:
-            self.slot_live[slot] -= old
+        with self._acct_mu:
+            self.slot_bytes[slot] += len(ukey)
+            old = self._key_bytes.pop(ukey, None)
+            if old is not None:
+                self.slot_live[slot] -= old
 
     def seed_from_index(self) -> int:
         """Rebuild the per-slot live-byte accounting from the recovered
@@ -192,31 +202,37 @@ class Rebalancer:
                     continue
                 size = len(e[0]) + entry_value_size(e[2], e[3])
                 slot = slot_of(e[0], store.n_slots)
-                old = self._key_bytes.get(e[0])
-                if old is not None:         # seeding is idempotent
-                    self.slot_live[slot] -= old
-                self._key_bytes[e[0]] = size
-                self.slot_live[slot] += size
+                with self._acct_mu:
+                    old = self._key_bytes.get(e[0])
+                    if old is not None:     # seeding is idempotent
+                        self.slot_live[slot] -= old
+                    self._key_bytes[e[0]] = size
+                    self.slot_live[slot] += size
                 n += 1
         return n
 
     # -- migration-window routing hooks (active regardless of the policy
     # knob — manual migrations need them too) ---------------------------
     def note_route_put(self, slot: int, ukey: bytes) -> None:
-        wd = self.window_deletes.get(slot)
-        if wd is not None:
-            wd.discard(ukey)
+        with self._acct_mu:
+            wd = self.window_deletes.get(slot)
+            if wd is not None:
+                wd.discard(ukey)
 
     def note_route_delete(self, slot: int, ukey: bytes) -> None:
-        wd = self.window_deletes.get(slot)
-        if wd is not None:
-            wd.add(ukey)
+        with self._acct_mu:
+            wd = self.window_deletes.get(slot)
+            if wd is not None:
+                wd.add(ukey)
 
     def is_window_deleted(self, slot: int, ukey: bytes) -> bool:
-        wd = self.window_deletes.get(slot)
-        return wd is not None and ukey in wd
+        with self._acct_mu:
+            wd = self.window_deletes.get(slot)
+            return wd is not None and ukey in wd
 
     def _loads(self, per_slot: List[int]) -> List[int]:
+        with self._acct_mu:
+            per_slot = list(per_slot)
         loads = [0] * self.store.n_shards
         for slot, owner in enumerate(self.store.slot_map):
             loads[owner] += per_slot[slot]
@@ -236,9 +252,18 @@ class Rebalancer:
     def maybe_rebalance(self) -> Optional[int]:
         """Propose one slot move when per-shard load diverges; returns the
         migrating slot or None.  Fired from the front-end's background
-        hooks (job-completion waiters + a per-N-ops tick)."""
+        hooks (job-completion waiters + a per-N-ops tick).  Runs under
+        the engine lock: admission, the superblock append and the job
+        launch are all engine state."""
         store = self.store
-        if not store.opts.rebalance or self.inflight or store.n_shards < 2:
+        if not store.opts.rebalance:
+            return None
+        with store.sched_core.engine_lock:
+            return self._maybe_rebalance_locked()
+
+    def _maybe_rebalance_locked(self) -> Optional[int]:
+        store = self.store
+        if self.inflight or store.n_shards < 2:
             return None
         if not store.sched.can_admit(JOB_MIGRATE):
             return None
@@ -277,22 +302,25 @@ class Rebalancer:
         The job body copies eagerly; routing changes only in its effects
         (the epoch commit) when the job's lane completes."""
         store = self.store
-        src_id = store.slot_map[slot]
-        if dst_id == src_id or slot in self.inflight:
-            return False
-        if not store.sched.can_admit(JOB_MIGRATE):
-            return False
-        # Durable intent: if the job's copies land but the epoch commit
-        # never does (crash), recovery matches this frame against the
-        # committed moves and tombstones the orphan copies on the target.
-        store._append_superblock({"version": 2,
-                                  "mig_start": [slot, src_id, dst_id]})
-        self.inflight[slot] = dst_id
-        self.window_deletes[slot] = set()
-        self.counters["migrations"] += 1
-        store.sched.run_job(
-            JOB_MIGRATE, lambda: self._migrate_body(slot, src_id, dst_id))
-        return True
+        with store.sched_core.engine_lock:
+            src_id = store.slot_map[slot]
+            if dst_id == src_id or slot in self.inflight:
+                return False
+            if not store.sched.can_admit(JOB_MIGRATE):
+                return False
+            # Durable intent: if the job's copies land but the epoch
+            # commit never does (crash), recovery matches this frame
+            # against the committed moves and tombstones the orphan
+            # copies on the target.
+            store._append_superblock({"version": 2,
+                                      "mig_start": [slot, src_id, dst_id]})
+            self.inflight[slot] = dst_id
+            with self._acct_mu:
+                self.window_deletes[slot] = set()
+            self.counters["migrations"] += 1
+            store.sched.run_job(
+                JOB_MIGRATE, lambda: self._migrate_body(slot, src_id, dst_id))
+            return True
 
     def _migrate_body(self, slot: int, src_id: int, dst_id: int):
         store = self.store
@@ -329,30 +357,55 @@ class Rebalancer:
             # front-end op (the op read slot_map before its record landed
             # on the source).  Committing there would flip routing under
             # the in-flight record and lose it past the catch-up scan —
-            # so while the front-end holds its routing guard, park the
-            # commit; the guard's exit runs it, at which point the
-            # record is in the source memtable and catch-up copies it.
+            # so while any front-end op holds a routing read hold, park
+            # the commit; the guard exit that leaves the routing lock
+            # idle runs it, at which point the op's record is in the
+            # source memtable and catch-up copies it.
+            #
+            # try_acquire_write only: effects run under the engine lock
+            # (level 2) and the routing lock is level 0 — a *blocking*
+            # out-of-order acquire could deadlock against active readers;
+            # a non-blocking probe cannot.
             def commit() -> None:
                 self._commit(slot, src_id, dst_id, watermark, flush_mark,
                              seen)
 
-            if getattr(self.store, "_route_locks", 0) > 0:
-                self._deferred.append(commit)
-                self.counters["deferred_commits"] += 1
+            if self.store.routing.try_acquire_write():
+                try:
+                    commit()
+                finally:
+                    self.store.routing.release_write()
             else:
-                commit()
+                with self._defer_mu:
+                    self._deferred.append(commit)
+                self.counters["deferred_commits"] += 1
 
         return effects
 
     def run_deferred(self) -> None:
-        """Run commits parked while a front-end op held the routing
-        guard (called at guard exit).  A completed commit re-evaluates
-        the policy immediately — the job-completion waiter that would
-        normally do so fired while the commit was still parked."""
+        """Run commits parked while front-end ops held the routing guard
+        (called by the guard exit that left the routing lock idle, and by
+        the op tick).  Exclusive routing access is re-probed here — if a
+        new reader slipped in, *its* exit retries.  A completed commit
+        re-evaluates the policy immediately — the job-completion waiter
+        that would normally do so fired while the commit was parked."""
+        with self._defer_mu:
+            if not self._deferred:
+                return
+        if not self.store.routing.try_acquire_write():
+            return
         ran = False
-        while self._deferred:
-            self._deferred.pop(0)()
-            ran = True
+        try:
+            with self.store.sched_core.engine_lock:
+                while True:
+                    with self._defer_mu:
+                        if not self._deferred:
+                            break
+                        fn = self._deferred.pop(0)
+                    fn()
+                    ran = True
+        finally:
+            self.store.routing.release_write()
         if ran:
             self.maybe_rebalance()
 
@@ -390,7 +443,9 @@ class Rebalancer:
         # flip never exposes the stale copy.
         # (last-op-wins: a put after the delete removed the key from the
         # set, so an unconditional tombstone can never shadow newer data)
-        for k in sorted(self.window_deletes.pop(slot, ())):
+        with self._acct_mu:
+            window = self.window_deletes.pop(slot, ())
+        for k in sorted(window):
             dst.write_index_entry(k, VT_DELETE, b"", IOClass.GC_WRITE_INDEX)
             seen.add(k)
             self.counters["window_deletes"] += 1

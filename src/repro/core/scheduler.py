@@ -22,12 +22,28 @@ RocksDB column families share ``Env`` threads:
   admission/allocation policy (one behavioural addition over the original:
   every job completion re-offers admission to all registered members, so
   pending background work is picked up as soon as a lane frees).
+
+Concurrency discipline
+----------------------
+``SchedulerCore.engine_lock`` is THE single serialization point for the
+simulated engine: the clock, device I/O charging, the event heap, lanes,
+admission counters, the governor window and every version/memtable
+structure the event effects mutate.  Client threads hold it for the span
+of one foreground op (``KVStore._fg``) or one background job
+(``Scheduler.run_job``); every ``pump``/``wait_for_event`` runs under it,
+so effects fired by one thread's pump can safely touch any shard's state.
+See ``core.concurrency`` for the full lock ordering (routing read-write
+lock -> per-shard latch -> engine lock -> leaf mutexes).  The one hard
+rule encoded here: **a thread never blocks on a condition variable while
+holding the engine lock** — commit-group followers wait on the commit
+condition only after their per-op engine sections have been released.
 """
 
 from __future__ import annotations
 
 import heapq
 import itertools
+import threading
 from typing import Callable, Dict, List, Optional, Tuple
 
 from ..store.device import BlockDevice, Clock, RateLimiter
@@ -95,6 +111,9 @@ class SchedulerCore:
         self.clock = clock
         self.device = device
         self.opts = opts
+        # The engine serialization point (see module docstring).  An RLock:
+        # foreground ops, job bodies and event effects nest freely.
+        self.engine_lock = threading.RLock()
         self.flush_lanes = Lanes(opts.flush_lanes)
         self.bg_lanes = Lanes(opts.n_threads)
         self.events: List[Tuple[float, int, Callable[[], None]]] = []
@@ -136,7 +155,8 @@ class SchedulerCore:
 
     # -- event pump ------------------------------------------------------
     def push_event(self, when: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self.events, (when, next(self.counter), fn))
+        with self.engine_lock:
+            heapq.heappush(self.events, (when, next(self.counter), fn))
 
     def add_waiter(self, fn: Callable[[], None]) -> None:
         self.waiters.append(fn)
@@ -147,50 +167,59 @@ class SchedulerCore:
 
     def pump(self) -> bool:
         """Apply all effects due at or before the current clock."""
-        ran = False
-        while self.events and self.events[0][0] <= self.clock.now:
-            _, _, fn = heapq.heappop(self.events)
-            fn()
-            ran = True
-        return ran
+        with self.engine_lock:
+            ran = False
+            while self.events and self.events[0][0] <= self.clock.now:
+                _, _, fn = heapq.heappop(self.events)
+                fn()
+                ran = True
+            return ran
 
     def next_event_time(self) -> Optional[float]:
-        return self.events[0][0] if self.events else None
+        with self.engine_lock:
+            return self.events[0][0] if self.events else None
 
     def wait_for_event(self) -> bool:
         """Advance the clock to the next completion (used during stalls)."""
-        t = self.next_event_time()
-        if t is None:
-            return False
-        self.clock.advance_to(t)
-        self.pump()
-        return True
+        with self.engine_lock:
+            t = self.next_event_time()
+            if t is None:
+                return False
+            self.clock.advance_to(t)
+            self.pump()
+            return True
 
     def drain(self, max_sim_s: float = 1e9) -> None:
         """Let all in-flight background work complete (quiesce)."""
-        guard = 0
-        while self.wait_for_event():
-            guard += 1
-            if guard > 1_000_000 or self.clock.now > max_sim_s:
-                break
+        with self.engine_lock:
+            guard = 0
+            while self.wait_for_event():
+                guard += 1
+                if guard > 1_000_000 or self.clock.now > max_sim_s:
+                    break
 
     # -- admission -------------------------------------------------------
     def can_admit(self, kind: str) -> bool:
-        if kind == JOB_FLUSH:
-            return self.active[JOB_FLUSH] < self.opts.flush_lanes
-        total = self.active[JOB_COMPACTION] + self.active[JOB_GC] \
-            + self.active[JOB_MIGRATE]
-        if total >= self.opts.n_threads:
-            return False
-        if kind == JOB_MIGRATE:
-            # Migrations move one slot at a time and compete with
-            # compaction/GC for the shared background lanes.
-            return self.active[JOB_MIGRATE] < 1
-        if kind == JOB_GC:
-            return self.active[JOB_GC] < self.max_gc
-        return self.active[JOB_COMPACTION] < self.opts.n_threads - \
-            (self.max_gc if self.opts.dynamic_scheduler else 0) or \
-            self.active[JOB_COMPACTION] < max(1, self.opts.n_threads - self.max_gc)
+        with self.engine_lock:
+            if kind == JOB_FLUSH:
+                return self.active[JOB_FLUSH] < self.opts.flush_lanes
+            total = self.active[JOB_COMPACTION] + self.active[JOB_GC] \
+                + self.active[JOB_MIGRATE]
+            if total >= self.opts.n_threads:
+                return False
+            if kind == JOB_MIGRATE:
+                # Migrations move one slot at a time and compete with
+                # compaction/GC for the shared background lanes.
+                return self.active[JOB_MIGRATE] < 1
+            if kind == JOB_GC:
+                return self.active[JOB_GC] < self.max_gc
+            # Compaction may not claim the lanes reserved for GC: the
+            # static baselines (Titan/TerarkDB) rely on ``max_gc`` lanes
+            # staying available or value-store GC starves behind a
+            # compaction backlog.  (Under the dynamic scheduler the same
+            # bound applies with the governed, recomputed ``max_gc``.)
+            return self.active[JOB_COMPACTION] < max(
+                1, self.opts.n_threads - self.max_gc)
 
     # -- dynamic thread allocation (paper eq. 4-6) -------------------------
     def update_allocation(self, member: int, p_index: float,
@@ -200,32 +229,38 @@ class SchedulerCore:
         lanes from the whole pool, not just its own slice."""
         if not self.opts.dynamic_scheduler:
             return
-        self._pressures[member] = (p_index, p_value)
-        eps = 1e-6
-        p_i = sum(max(p, 0.0) for p, _ in self._pressures.values()) + eps
-        p_v = sum(max(p, 0.0) for _, p in self._pressures.values()) + eps
-        n = self.opts.n_threads
-        self.max_gc = int(round(n * p_v / (p_i + p_v)))
-        self.max_gc = max(1, min(n - 1, self.max_gc))
+        with self.engine_lock:
+            self._pressures[member] = (p_index, p_value)
+            eps = 1e-6
+            p_i = sum(max(p, 0.0) for p, _ in self._pressures.values()) + eps
+            p_v = sum(max(p, 0.0) for _, p in self._pressures.values()) + eps
+            n = self.opts.n_threads
+            self.max_gc = int(round(n * p_v / (p_i + p_v)))
+            self.max_gc = max(1, min(n - 1, self.max_gc))
 
     # -- bandwidth governor (paper III-D.2) --------------------------------
     def note_flush(self, nbytes: int, duration: float) -> None:
-        self._win_flush_bytes += nbytes
-        self._win_flush_time += duration
+        with self.engine_lock:
+            self._win_flush_bytes += nbytes
+            self._win_flush_time += duration
 
     def note_write(self, nbytes: int) -> None:
-        self._win_write_bytes += nbytes
+        with self.engine_lock:
+            self._win_write_bytes += nbytes
 
     def note_wal_sync(self, nbytes: int, nrecords: int = 1) -> None:
         """Record one durable WAL sync covering ``nrecords`` records."""
-        self.wal_syncs += 1
-        self.wal_records += nrecords
-        self.wal_bytes += nbytes
-        self.note_write(nbytes)
+        with self.engine_lock:
+            self.wal_syncs += 1
+            self.wal_records += nrecords
+            self.wal_bytes += nbytes
+            self.note_write(nbytes)
 
     def note_bg_write(self, kind: str, nbytes: int) -> None:
         """Attribute ``nbytes`` of background output to job ``kind``."""
-        self.bg_write_bytes[kind] = self.bg_write_bytes.get(kind, 0) + nbytes
+        with self.engine_lock:
+            self.bg_write_bytes[kind] = \
+                self.bg_write_bytes.get(kind, 0) + nbytes
 
     def wal_stats(self) -> Dict[str, int]:
         return {"syncs": self.wal_syncs, "records": self.wal_records,
@@ -237,6 +272,10 @@ class SchedulerCore:
     def govern_bandwidth(self) -> None:
         if not self.opts.dynamic_scheduler:
             return
+        with self.engine_lock:
+            self._govern_locked()
+
+    def _govern_locked(self) -> None:
         now = self.clock.now
         win = now - self._win_start
         if win < self.opts.rate_window_s:
@@ -285,22 +324,27 @@ class Scheduler:
     def run_job(self, kind: str, body: Callable[[], Callable[[], None]],
                 ) -> float:
         """Execute ``body`` now (real work, time into a JobClock), schedule
-        its returned effects at lane completion time.  Returns end time."""
+        its returned effects at lane completion time.  Returns end time.
+
+        The whole span runs under the engine lock: the JobClock redirects
+        the *shared* clock's sink, so another thread charging time while
+        the body runs would corrupt the job duration."""
         core = self.core
-        core.active[kind] += 1
-        with JobClock(self.device) as jc:
-            effects = body()
-        lanes = core.flush_lanes if kind == JOB_FLUSH else core.bg_lanes
-        end = lanes.schedule(self.clock.now, jc.elapsed)
-        elapsed = jc.elapsed
+        with core.engine_lock:
+            core.active[kind] += 1
+            with JobClock(self.device) as jc:
+                effects = body()
+            lanes = core.flush_lanes if kind == JOB_FLUSH else core.bg_lanes
+            end = lanes.schedule(self.clock.now, jc.elapsed)
+            elapsed = jc.elapsed
 
-        def _complete() -> None:
-            core.active[kind] -= 1
-            effects(elapsed)
-            core.notify_waiters()
+            def _complete() -> None:
+                core.active[kind] -= 1
+                effects(elapsed)
+                core.notify_waiters()
 
-        core.push_event(end, _complete)
-        return end
+            core.push_event(end, _complete)
+            return end
 
     def pump(self) -> bool:
         return self.core.pump()

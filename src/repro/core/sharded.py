@@ -49,6 +49,7 @@ stay at the static even split of the pre-shared-cache era).
 from __future__ import annotations
 
 import heapq as _heapq
+import threading
 from contextlib import contextmanager
 from typing import (Callable, Dict, Iterable, List, Optional,
                     Sequence, Tuple)
@@ -58,6 +59,7 @@ import msgpack
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
 from .cache import SharedReadCache
 from .commitlog import GroupCommitLog
+from .concurrency import RWLock
 from .db import KVStore, validate_batch_ops
 from .options import Options
 from .rebalance import (DEFAULT_SLOTS, Rebalancer, default_slot_map, slot_of)
@@ -94,7 +96,12 @@ class ShardedKVStore:
         self._on_user_write: Optional[Callable[[bytes, int, bytes], None]] \
             = None
         self._ops_since_rebalance = 0
-        self._route_locks = 0
+        self._tick_mu = threading.Lock()
+        # Routing epoch lock (level 0 of the hierarchy, see
+        # core.concurrency): routed ops hold the read side, migration
+        # epoch commits need the write side (taken with try_acquire_write
+        # only — they defer rather than block).
+        self.routing = RWLock()
         pending_cleanup: Optional[Tuple[int, int, int]] = None
         if recover:
             sb = self._read_superblock()
@@ -174,30 +181,31 @@ class ShardedKVStore:
                 pending.setdefault(fid, set()).add(tag)
         for s in self.shards:
             s.versions.pending_wals.clear()
-        self.device.charge_time = False
         # Re-log every surviving record through its shard's sink (one
         # commit group — a single coalesced append into the fresh active
         # segment) so recovered memtable state is durable again and a
         # second crash before the next flush replays it identically.
-        with self.commitlog.group():
-            for fid in sorted(pending):
-                if not self.device.exists(fid):
-                    continue
-                for tag, ukey, seq, vtype, payload in GroupCommitLog.replay(
-                        self.device, fid):
-                    if tag >= n_shards:
-                        raise RuntimeError(
-                            f"commit-log segment {fid} carries shard tag "
-                            f"{tag} but the superblock says "
-                            f"n_shards={n_shards}: stale superblock / "
-                            "shard-count mismatch — refusing to recover")
-                    if tag in pending[fid]:
-                        shard = self.shards[tag]
-                        shard.versions.seq = max(shard.versions.seq, seq)
-                        shard.sink.append(ukey, seq, vtype, payload)
-                        shard.mem.put(ukey, seq, vtype, payload)
-                self.device.delete(fid)
-        self.device.charge_time = True
+        # time_free: replay I/O stays off the clock and a corrupt segment
+        # (the RuntimeError below) cannot leave time charging disabled.
+        with self.device.time_free():
+            with self.commitlog.group():
+                for fid in sorted(pending):
+                    if not self.device.exists(fid):
+                        continue
+                    for tag, ukey, seq, vtype, payload in \
+                            GroupCommitLog.replay(self.device, fid):
+                        if tag >= n_shards:
+                            raise RuntimeError(
+                                f"commit-log segment {fid} carries shard "
+                                f"tag {tag} but the superblock says "
+                                f"n_shards={n_shards}: stale superblock / "
+                                "shard-count mismatch — refusing to recover")
+                        if tag in pending[fid]:
+                            shard = self.shards[tag]
+                            shard.versions.seq = max(shard.versions.seq, seq)
+                            shard.sink.append(ukey, seq, vtype, payload)
+                            shard.mem.put(ukey, seq, vtype, payload)
+                    self.device.delete(fid)
 
     # ==================================================================
     # Superblock (append-only frame log, versioned decode)
@@ -217,9 +225,8 @@ class ShardedKVStore:
         if not self.device.exists(SUPERBLOCK_FID):
             raise RuntimeError("no superblock — device was never "
                                "initialised by a ShardedKVStore")
-        self.device.charge_time = False
-        buf = self.device.read_all(SUPERBLOCK_FID, IOClass.MANIFEST)
-        self.device.charge_time = True
+        with self.device.time_free():
+            buf = self.device.read_all(SUPERBLOCK_FID, IOClass.MANIFEST)
         frames: List[dict] = []
         pos = 0
         while pos + 4 <= len(buf):
@@ -296,13 +303,20 @@ class ShardedKVStore:
         scan.  While the guard is held, commits park on the rebalancer's
         deferred list; the outermost guard exit runs them — at which
         point the op's records are in the source memtable, so the commit
-        catch-up copies them like any other pre-commit write."""
-        self._route_locks += 1
+        catch-up copies them like any other pre-commit write.
+
+        Concurrency: the guard is the *read* side of ``self.routing`` —
+        shared across client threads, reentrant per thread.  An epoch
+        commit needs the write side; inside ``pump`` it only ever
+        ``try_acquire_write``s (any active reader defers it), and the
+        reader whose release leaves the lock idle runs the deferred
+        commits — the same semantics the old ``_route_locks`` counter
+        gave a single thread."""
+        self.routing.acquire_read()
         try:
             yield
         finally:
-            self._route_locks -= 1
-            if self._route_locks == 0:
+            if self.routing.release_read():
                 self.rebalancer.run_deferred()
 
     def _slot(self, ukey: bytes) -> int:
@@ -315,10 +329,13 @@ class ShardedKVStore:
         return self.shards[self.shard_of(ukey)]
 
     def _tick_rebalance(self, n_ops: int = 1) -> None:
-        self._ops_since_rebalance += n_ops
-        if self._ops_since_rebalance >= REBALANCE_TICK_OPS:
+        with self._tick_mu:
+            self._ops_since_rebalance += n_ops
+            if self._ops_since_rebalance < REBALANCE_TICK_OPS:
+                return
             self._ops_since_rebalance = 0
-            self.rebalancer.maybe_rebalance()
+        self.rebalancer.run_deferred()
+        self.rebalancer.maybe_rebalance()
 
     # ==================================================================
     # Single-op API (same surface as KVStore)
@@ -457,9 +474,10 @@ class ShardedKVStore:
 
     def flush_all(self) -> None:
         for s in self.shards:
-            if len(s.mem):
-                s._rotate_memtable()
-            s.maybe_schedule_background()
+            with s._fg():
+                if len(s.mem):
+                    s._rotate_memtable()
+                s.maybe_schedule_background()
         self.drain()
 
     def drain(self, max_sim_s: float = 1e9) -> None:
@@ -483,7 +501,11 @@ class ShardedKVStore:
     # ==================================================================
 
     def space_usage(self) -> Dict[str, object]:
-        per = [s.space_usage() for s in self.shards]
+        with self.sched_core.engine_lock:
+            return self._space_usage_locked()
+
+    def _space_usage_locked(self) -> Dict[str, object]:
+        per = [s._space_usage_locked() for s in self.shards]
         lvl = [sum(p["index_level_bytes"][i] for p in per)
                for i in range(self.opts.num_levels)]
         tot_v = sum(p["value_total_bytes"] for p in per)
@@ -502,6 +524,10 @@ class ShardedKVStore:
         }
 
     def stats(self) -> Dict[str, object]:
+        with self.sched_core.engine_lock:
+            return self._stats_locked()
+
+    def _stats_locked(self) -> Dict[str, object]:
         counters: Dict[str, float] = {}
         gc_step: Dict[str, float] = {}
         for s in self.shards:
@@ -528,7 +554,7 @@ class ShardedKVStore:
         return {
             "sim_time_s": self.clock.now,
             "n_shards": self.n_shards,
-            "space": self.space_usage(),
+            "space": self._space_usage_locked(),
             "io": self.device.stats.snapshot(),
             "counters": counters,
             "gc_step_time_s": gc_step,

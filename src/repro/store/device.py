@@ -293,6 +293,20 @@ class BlockDevice:
         finally:
             self.charge_time, self.stats = saved_ct, saved_stats
 
+    @contextmanager
+    def time_free(self):
+        """Suspend time charging but keep op/byte accounting (recovery
+        replay: reads still count, the clock does not move).  Unlike
+        :meth:`uncharged`, stats are preserved, and unlike a bare
+        ``charge_time = False`` toggle, an exception mid-window (corrupt
+        segment, stale superblock) cannot leave charging disabled."""
+        saved_ct = self.charge_time
+        self.charge_time = False
+        try:
+            yield
+        finally:
+            self.charge_time = saved_ct
+
 
 class FSBlockDevice(BlockDevice):
     """Same interface, but bytes also live in real files under ``root``.

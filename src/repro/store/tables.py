@@ -422,6 +422,11 @@ class KTableReader:
         if i >= len(index):
             return None
         first, _, off, ln = index[i]
+        if ukey < first:
+            # Key falls in the gap between block i-1's last key and block
+            # i's first key: no block can contain it.  Reading block i
+            # anyway would waste a device read and pollute the cache.
+            return None
         return (off, ln)
 
     def _get_in(self, index: List[Tuple[bytes, bytes, int, int]],

@@ -160,6 +160,38 @@ def test_evict_file_drops_exactly_that_files_blocks():
     assert core.resident_bytes() == 0
 
 
+def test_evict_file_purges_stale_readmit_marks():
+    """A dropped file's pending re-admission marks can never be consumed
+    (fids are not reused, so the fill ``put`` never comes); left behind
+    they squat in the capped per-shard set and block marks for live
+    blocks.  ``evict_file`` must purge them along with residents and
+    ghosts."""
+    core = SharedReadCache(10_000, n_shards=2, adaptive=True,
+                           retune_interval=1 << 30)
+    # Fill each shard near quota, then admission-gated puts leave ghost
+    # fingerprints; re-reading each is a ghost hit that leaves a
+    # re-admission mark awaiting the fill.
+    core.put(0, (6, 0), b"f" * 3000)
+    core.put(1, (6, 1), b"f" * 3000)
+    for fid in (7, 8):
+        core.put(0, (fid, 0), b"x" * 3000)      # pressure → ghost only
+        assert core.get(0, (fid, 0)) is None    # ghost hit → mark
+    core.put(1, (7, 4), b"y" * 3000)
+    assert core.get(1, (7, 4)) is None
+    assert {(7, 0), (8, 0)} <= core._readmit[0]
+    assert (7, 4) in core._readmit[1]
+    core.evict_file(0, 7)
+    # invariant: no mark (in any shard) references the dropped fid...
+    assert all(k[0] != 7 for marks in core._readmit for k in marks)
+    # ...and marks for live fids survive
+    assert (8, 0) in core._readmit[0]
+    # a surviving mark is consumed as before: the fill is admitted even
+    # under pressure (displacing residents), and the mark is cleared
+    core.put(0, (8, 0), b"z" * 3000)
+    assert core.get(0, (8, 0)) is not None
+    assert (8, 0) not in core._readmit[0]
+
+
 # =====================================================================
 # Read-cost placement term
 # =====================================================================

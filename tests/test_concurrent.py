@@ -1,0 +1,306 @@
+"""Concurrent front-end: RWLock semantics, cross-thread group-commit
+coalescing, scheduler admission, recovery exception-safety, and the
+acceptance stress test (threaded write/read/scan during an in-flight
+migration with zero lost or duplicated keys)."""
+
+import threading
+import time
+
+import pytest
+
+from repro.bench.harness import wal_sync_count
+from repro.core import KVStore, ShardedKVStore, preset
+from repro.core.concurrency import RWLock
+from repro.core.options import Options
+from repro.core.scheduler import (JOB_COMPACTION, JOB_GC, JOB_MIGRATE,
+                                  SchedulerCore)
+from repro.store.device import BlockDevice
+
+JOIN_S = 120        # deadlock backstop: a hung thread fails, not hangs
+
+
+def _run_all(threads):
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(JOIN_S)
+        assert not t.is_alive(), "worker deadlocked"
+
+
+# =====================================================================
+# RWLock
+# =====================================================================
+
+def test_rwlock_shared_reads_exclusive_writes():
+    lk = RWLock()
+    lk.acquire_read()
+    assert lk.read_held
+    # a concurrent reader proceeds while a read hold is out
+    ok = []
+
+    def reader():
+        lk.acquire_read()
+        ok.append(True)
+        lk.release_read()
+
+    t = threading.Thread(target=reader)
+    _run_all([t])
+    assert ok
+    # but a writer cannot enter
+    assert not lk.try_acquire_write()
+    assert lk.release_read() is True          # idle edge reported
+    assert lk.try_acquire_write()
+    assert lk.write_held
+    # the writer may read under its own write hold (not counted, no edge)
+    lk.acquire_read()
+    assert lk.release_read() is False
+    lk.release_write()
+
+
+def test_rwlock_reentrant_reads_report_idle_only_at_last_release():
+    lk = RWLock()
+    lk.acquire_read()
+    lk.acquire_read()
+    assert lk.release_read() is False
+    assert lk.release_read() is True
+
+
+def test_rwlock_waiting_writer_blocks_new_readers():
+    lk = RWLock()
+    lk.acquire_read()
+    writer_in = threading.Event()
+    reader_in = threading.Event()
+
+    def writer():
+        lk.acquire_write()
+        writer_in.set()
+        time.sleep(0.02)
+        lk.release_write()
+
+    def late_reader():
+        # started while the writer waits: must park until it finishes
+        lk.acquire_read()
+        reader_in.set()
+        lk.release_read()
+
+    tw = threading.Thread(target=writer)
+    tw.start()
+    while lk.try_acquire_write():             # wait until tw is queued
+        lk.release_write()
+    tr = threading.Thread(target=late_reader)
+    tr.start()
+    time.sleep(0.02)
+    assert not writer_in.is_set()             # blocked on our read hold
+    assert not reader_in.is_set()             # parked behind the writer
+    lk.release_read()
+    tw.join(JOIN_S)
+    tr.join(JOIN_S)
+    assert writer_in.is_set() and reader_in.is_set()
+    # writer preference also means try_write fails while readers are out
+    lk.acquire_read()
+    assert not lk.try_acquire_write()
+    lk.release_read()
+
+
+# =====================================================================
+# Scheduler admission (static-mode regression)
+# =====================================================================
+
+def test_static_admission_reserves_gc_lanes():
+    """With the static scheduler, compaction may not claim the lanes
+    reserved for value-store GC: the old disjunction admitted compaction
+    whenever *any* lane was free, letting a compaction backlog starve
+    GC behind it."""
+    dev = BlockDevice()
+    core = SchedulerCore(dev.clock, dev,
+                         Options(n_threads=4, dynamic_scheduler=False))
+    assert core.max_gc == 2
+    core.active[JOB_COMPACTION] = 2
+    assert not core.can_admit(JOB_COMPACTION)   # 2 lanes reserved for GC
+    assert core.can_admit(JOB_GC)
+    assert core.can_admit(JOB_MIGRATE)
+    core.active[JOB_COMPACTION] = 1
+    assert core.can_admit(JOB_COMPACTION)
+    # the global lane ceiling still applies to everything
+    core.active[JOB_COMPACTION] = 2
+    core.active[JOB_GC] = 2
+    assert not core.can_admit(JOB_GC)
+    assert not core.can_admit(JOB_MIGRATE)
+
+
+# =====================================================================
+# Cross-thread group commit
+# =====================================================================
+
+def test_threaded_write_batch_coalesces_wal_syncs_sharded():
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=4)
+    n_threads, per, bsz = 4, 120, 4
+    barrier = threading.Barrier(n_threads)
+    val = b"v" * 100
+
+    def worker(tid):
+        barrier.wait()
+        for i in range(0, per, bsz):
+            db.write_batch([("put", b"t%02d-%05d" % (tid, i + j), val)
+                            for j in range(bsz)])
+
+    _run_all([threading.Thread(target=worker, args=(t,))
+              for t in range(n_threads)])
+    batches = n_threads * per // bsz
+    # within-batch coalescing alone gives syncs == batches; cross-thread
+    # rounds must merge concurrent batches below that
+    assert db.commitlog.syncs < batches
+    assert db.commitlog.records == n_threads * per
+    db.drain()
+    for tid in range(n_threads):
+        for i in range(per):
+            assert db.get(b"t%02d-%05d" % (tid, i)) == val
+
+
+def test_threaded_write_batch_coalesces_wal_syncs_solo():
+    db = KVStore(preset("scavenger_plus"))
+    n_threads, per, bsz = 4, 80, 4
+    barrier = threading.Barrier(n_threads)
+    val = b"v" * 64
+
+    def worker(tid):
+        barrier.wait()
+        for i in range(0, per, bsz):
+            db.write_batch([("put", b"s%02d-%05d" % (tid, i + j), val)
+                            for j in range(bsz)])
+
+    _run_all([threading.Thread(target=worker, args=(t,))
+              for t in range(n_threads)])
+    assert wal_sync_count(db) < n_threads * per // bsz
+    db.drain()
+    for tid in range(n_threads):
+        for i in range(per):
+            assert db.get(b"s%02d-%05d" % (tid, i)) == val
+
+
+def test_rotation_mid_group_preserves_durability():
+    """A batch large enough to rotate memtables mid-group splits its
+    records across WAL segments; crash recovery must still surface every
+    record exactly once."""
+    device = BlockDevice()
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=2,
+                        device=device)
+    big = b"x" * 8000
+    db.write_batch([("put", b"r%05d" % i, big) for i in range(40)])
+    db2 = ShardedKVStore(preset("scavenger_plus"), device=device,
+                         recover=True)
+    for i in range(40):
+        assert db2.get(b"r%05d" % i) == big
+
+
+# =====================================================================
+# Recovery exception-safety (device.time_free)
+# =====================================================================
+
+def test_failed_recovery_leaves_time_charging_enabled():
+    """A recovery that dies mid-replay (stale superblock) must not leave
+    the device with ``charge_time`` disabled — later stores sharing the
+    device would silently stop advancing the simulated clock."""
+    import msgpack
+
+    device = BlockDevice()
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=3,
+                        device=device)
+    db.write_batch([("put", b"k%06d" % i, b"v" * 64) for i in range(90)])
+    blob = msgpack.packb(
+        {"n_shards": 2,
+         "manifests": [s.versions.manifest_fid for s in db.shards[:2]]},
+        use_bin_type=True)
+    device._files[1] = bytearray(len(blob).to_bytes(4, "little") + blob)
+    with pytest.raises(RuntimeError, match="shard-count mismatch"):
+        ShardedKVStore(preset("scavenger_plus"), device=device,
+                       recover=True)
+    assert device.charge_time is True
+
+
+def test_time_free_restores_on_exception():
+    dev = BlockDevice()
+    with pytest.raises(ValueError):
+        with dev.time_free():
+            assert dev.charge_time is False
+            raise ValueError("boom")
+    assert dev.charge_time is True
+    # and op accounting is kept (unlike `uncharged`)
+    from repro.store.device import IOClass
+    fid = dev.create()
+    dev.append(fid, b"z" * 100, IOClass.WAL)
+    ops0 = dev.stats.by_class[IOClass.USER_READ].ops
+    t0 = dev.clock.now
+    with dev.time_free():
+        dev.read(fid, 0, 100, IOClass.USER_READ)
+    assert dev.stats.by_class[IOClass.USER_READ].ops == ops0 + 1
+    assert dev.clock.now == t0
+
+
+# =====================================================================
+# Acceptance: threaded stress during an in-flight migration
+# =====================================================================
+
+def test_stress_concurrent_ops_during_migration():
+    db = ShardedKVStore(preset("scavenger_plus", num_slots=64), n_shards=4)
+    vals = {}
+    for i in range(300):
+        k = b"mig%05d" % i
+        v = bytes([32 + i % 64]) * 300
+        db.put(k, v)
+        vals[k] = v
+    slot = next(s for s, o in enumerate(db.slot_map) if o == 0)
+    db.rebalancer.start_migration(slot, 1)
+
+    n_writers, w_ops = 2, 150
+    wval = b"n" * 64
+    errs = []
+    barrier = threading.Barrier(n_writers + 2)
+
+    def writer(tid):
+        try:
+            barrier.wait()
+            for i in range(w_ops):
+                db.write_batch([
+                    ("put", b"w%02d-%05d" % (tid, 4 * i + j), wval)
+                    for j in range(4)])
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    def reader():
+        try:
+            barrier.wait()
+            for i in range(600):
+                k = b"mig%05d" % (i % 300)
+                if db.get(k) != vals[k]:
+                    errs.append(AssertionError("stale read %r" % k))
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    def scanner():
+        try:
+            barrier.wait()
+            for _ in range(15):
+                got = db.scan(b"mig", 350)
+                ks = [k for k, _ in got]
+                if len(ks) != len(set(ks)):
+                    errs.append(AssertionError("duplicate keys in scan"))
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    _run_all([threading.Thread(target=writer, args=(t,))
+              for t in range(n_writers)]
+             + [threading.Thread(target=reader),
+                threading.Thread(target=scanner)])
+    assert not errs, errs
+    db.drain()
+    # no lost updates, no duplicates, migration state consistent
+    for k, v in vals.items():
+        assert db.get(k) == v
+    for tid in range(n_writers):
+        for i in range(4 * w_ops):
+            assert db.get(b"w%02d-%05d" % (tid, i)) == wval
+    got = db.scan(b"", len(vals) + n_writers * 4 * w_ops + 100)
+    keys = [k for k, _ in got]
+    assert len(keys) == len(set(keys))
+    assert len(keys) == len(vals) + n_writers * 4 * w_ops

@@ -116,3 +116,47 @@ def test_block_cache_priority_protects_index_blocks():
     for i in range(20):
         c.put((2, i), b"d" * 300)      # low-pri churn
     assert c.get((1, 0)) is not None   # survived
+
+
+# =====================================================================
+# Sparse-index gap probes (_find_block)
+# =====================================================================
+
+def test_find_block_returns_none_for_inter_block_gap_keys():
+    """A key between block i-1's last and block i's first key is provably
+    absent; the old probe ignored ``first`` and returned block i anyway,
+    costing a wasted device read and a polluted cache slot."""
+    idx = [(b"b", b"d", 0, 10), (b"h", b"k", 10, 12)]
+    fb = KTableReader._find_block
+    assert fb(idx, b"a") is None            # before the first block
+    assert fb(idx, b"b") == (0, 10)         # block boundaries inclusive
+    assert fb(idx, b"c") == (0, 10)
+    assert fb(idx, b"d") == (0, 10)
+    assert fb(idx, b"e") is None            # the gap between blocks
+    assert fb(idx, b"g!") is None
+    assert fb(idx, b"h") == (10, 12)
+    assert fb(idx, b"k") == (10, 12)
+    assert fb(idx, b"z") is None            # past the last block
+
+
+def test_gap_key_probe_costs_no_device_read():
+    dev = BlockDevice()
+    w = KTableWriter(dev, block_bytes=256, dtable=False)
+    entries = [(b"k%06d" % (10 * i), 100 + i, VT_VALUE, b"v" * 64)
+               for i in range(60)]
+    for e in entries:
+        w.add(e)
+    fid, _ = w.finish()
+    r = KTableReader(dev, fid, BlockCache(1 << 20))
+    assert len(r.data_idx) > 1
+    # a key strictly between block 0's last and block 1's first key
+    gap = r.data_idx[0][1] + b"!"
+    assert gap < r.data_idx[1][0]
+    ops0 = dev.stats.by_class[IOClass.USER_READ].ops
+    # bypass the bloom filter (pass None): isolate the index probe
+    assert r._get_in(r.data_idx, None, gap, IOClass.USER_READ, False) is None
+    assert dev.stats.by_class[IOClass.USER_READ].ops == ops0
+    # control: a real key in block 1 costs exactly one block read
+    assert r._get_in(r.data_idx, None, r.data_idx[1][0],
+                     IOClass.USER_READ, False) is not None
+    assert dev.stats.by_class[IOClass.USER_READ].ops == ops0 + 1
