@@ -4,6 +4,10 @@ Each workload runs against a dataset that was loaded and then updated by
 3x its size (to activate GC in every KV-separated store), matching the
 paper's procedure.  A 1.5x space limit applies (Fig. 17); YCSB-A is also
 run without the limit, reporting space amp (Fig. 18).
+
+YCSB-F runs its update half as true validated read-modify-writes through
+the unified Store API; those rows also report the rmw op / conflict-retry
+counters from the engine.
 """
 
 from __future__ import annotations
@@ -24,11 +28,19 @@ def run() -> list:
             db = loaded_db(sysname, spec, space_limit_x=1.5)
             run_phase(db, "update", gen_update(spec), drain=True)
             for which in YCSB:
+                c0 = dict(db.stats()["counters"])
                 r = run_phase(db, f"ycsb-{which}",
                               gen_ycsb(spec, which, n_ops))
                 us = 1e6 * r.sim_seconds / max(1, r.ops)
-                rows.append(f"ycsb/{wl}/{which}/{SHORT[sysname]},{us:.2f},"
-                            f"kops={r.kops_per_s:.2f}")
+                row = (f"ycsb/{wl}/{which}/{SHORT[sysname]},{us:.2f},"
+                       f"kops={r.kops_per_s:.2f}")
+                if which == "f":
+                    c1 = db.stats()["counters"]
+                    rmw = c1.get("rmw_ops", 0) - c0.get("rmw_ops", 0)
+                    cfl = (c1.get("rmw_conflicts", 0)
+                           - c0.get("rmw_conflicts", 0))
+                    row += f";rmw={rmw:.0f};rmw_conflicts={cfl:.0f}"
+                rows.append(row)
         # Fig. 18: YCSB-A without space limit
         for sysname in systems():
             spec = make_spec(wl)

@@ -1,6 +1,7 @@
-"""Benchmark harness: drives op streams against a KVStore, measuring
-simulated throughput, space amplification and the hidden/exposed garbage
-split via a user-level oracle (paper Fig. 5/6 decomposition).
+"""Benchmark harness: drives op streams against any ``repro.core.Store``
+(solo or sharded), measuring simulated throughput, space amplification
+and the hidden/exposed garbage split via a user-level oracle (paper
+Fig. 5/6 decomposition).
 """
 
 from __future__ import annotations
@@ -112,7 +113,9 @@ def run_phase(db, name: str, ops: Iterable[Op],
     """Drive an op stream.  With ``batch > 1``, consecutive writes
     coalesce into ``write_batch`` and consecutive gets into ``multi_get``
     (batch latency attributed evenly across its ops); stores without the
-    batched API fall back to per-op submission."""
+    batched API fall back to per-op submission.  ``('rmw', k, v)`` ops
+    (YCSB-F) go through ``db.read_modify_write`` individually — the
+    read-validate-write round trip is the thing being measured."""
     if batch > 1 and not hasattr(db, "write_batch"):
         batch = 0
     st = db.device.stats
@@ -160,6 +163,13 @@ def run_phase(db, name: str, ops: Iterable[Op],
                 gbuf.append(op[1])
                 if len(gbuf) >= batch:
                     _flush_gets()
+            elif kind == "rmw":
+                _flush_writes()
+                _flush_gets()
+                s_t0 = db.clock.now
+                db.read_modify_write(op[1], lambda _cur, v=op[2]: v)
+                if lats is not None:
+                    lats.append(db.clock.now - s_t0)
             else:
                 _flush_writes()
                 _flush_gets()
@@ -177,6 +187,8 @@ def run_phase(db, name: str, ops: Iterable[Op],
             db.get(op[1])
         elif kind == "del":
             db.delete(op[1])
+        elif kind == "rmw":
+            db.read_modify_write(op[1], lambda _cur, v=op[2]: v)
         else:
             db.scan(op[1], op[2])
         if lats is not None:

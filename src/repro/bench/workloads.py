@@ -22,7 +22,7 @@ from ..core.options import Options
 
 KEY_BYTES = 24
 
-Op = Tuple  # ('put', k, v) | ('del', k) | ('get', k) | ('scan', k, n)
+Op = Tuple  # ('put',k,v) | ('del',k) | ('get',k) | ('scan',k,n) | ('rmw',k,v)
 
 
 @dataclasses.dataclass
@@ -258,9 +258,10 @@ def gen_ycsb(spec: WorkloadSpec, which: str, n_ops: int) -> Iterator[Op]:
             yield ("scan", make_key(kc.next()),
                    int(rng.integers(2, spec.scan_max + 1)))
         else:
-            k = make_key(kc.next())
-            yield ("get", k)
-            yield ("put", k, vm.value(vm.next_size()))
+            # Workload F: a true read-modify-write op — the harness runs
+            # it through ``Store.read_modify_write`` (validated, retried
+            # on conflict) rather than an unvalidated get+put pair.
+            yield ("rmw", make_key(kc.next()), vm.value(vm.next_size()))
 
 
 # ---------------------------------------------------------------------------
@@ -275,8 +276,8 @@ def tenant_key(tenant: int, key: bytes) -> bytes:
 
 def _prefix_ops(stream: Iterator[Op], tenant: int) -> Iterator[Op]:
     for op in stream:
-        if op[0] == "put":
-            yield ("put", tenant_key(tenant, op[1]), op[2])
+        if op[0] in ("put", "rmw"):
+            yield (op[0], tenant_key(tenant, op[1]), op[2])
         elif op[0] == "scan":
             yield ("scan", tenant_key(tenant, op[1]), op[2])
         else:                                   # get / del

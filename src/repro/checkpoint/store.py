@@ -7,9 +7,19 @@ separated values; superseded shards from incremental checkpoints become
 *exposed garbage* that the engine's GC reclaims (compensated-size
 compaction keeps the metadata tree compact).
 
-Durability: the engine's WAL + manifest make saves crash-consistent — a
-checkpoint is visible iff its ``meta`` key committed (written LAST).
+Durability: a save commits through one ``write_batch`` — every chunk and
+the ``meta`` key ride a single commit group (one WAL sync), and a crash
+either durably has the whole batch or none of it.  Consistency: reads
+(``restore``/``steps``/``latest``) run under one pinned MVCC snapshot,
+so an online backup taken *while* training threads keep saving observes
+a frozen, batch-consistent view — no half-written checkpoint, no meta
+key whose chunks have already been retention-deleted underneath it.
 ``FSBlockDevice`` persists across process restarts.
+
+The store targets the :class:`~repro.core.Store` protocol: pass any
+conforming ``db`` (solo :class:`~repro.core.KVStore` or a
+:class:`~repro.core.ShardedKVStore`) and checkpoints stripe across its
+topology unchanged.
 """
 
 from __future__ import annotations
@@ -20,7 +30,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import msgpack
 import numpy as np
 
+from ..core import Store
 from ..core.db import KVStore
+from ..core.mvcc import Snapshot
 from ..core.options import preset
 from ..store.device import FSBlockDevice
 
@@ -44,7 +56,7 @@ class CheckpointConfig:
 class CheckpointStore:
     def __init__(self, root: Optional[str] = None,
                  cc: Optional[CheckpointConfig] = None,
-                 db: Optional[KVStore] = None, recover: bool = False
+                 db: Optional[Store] = None, recover: bool = False
                  ) -> None:
         self.cc = cc or CheckpointConfig()
         if db is not None:
@@ -68,8 +80,14 @@ class CheckpointStore:
 
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None
              ) -> None:
+        """Write one checkpoint as ONE atomic batch: all chunk keys plus
+        the ``meta`` key (ordered last for readability; atomicity no
+        longer depends on the ordering) commit under a single group —
+        one WAL sync for the whole checkpoint, and concurrent snapshot
+        readers see it all-or-nothing."""
         leaves = self._flatten(tree)
         manifest = {"step": step, "extra": extra or {}, "tensors": {}}
+        batch: List[Tuple] = []
         for name, arr in leaves:
             data = arr.tobytes()
             n_chunks = max(1, -(-len(data) // CHUNK))
@@ -77,44 +95,51 @@ class CheckpointStore:
                 "shape": list(arr.shape), "dtype": str(arr.dtype),
                 "chunks": n_chunks}
             for i in range(n_chunks):
-                self.db.put(_key_chunk(step, name, i),
-                            data[i * CHUNK:(i + 1) * CHUNK])
-        # meta commits the checkpoint (written last → crash-consistent)
-        self.db.put(_key_meta(step), msgpack.packb(manifest))
+                batch.append(("put", _key_chunk(step, name, i),
+                              data[i * CHUNK:(i + 1) * CHUNK]))
+        batch.append(("put", _key_meta(step), msgpack.packb(manifest)))
+        self.db.write_batch(batch)
         self._enforce_retention()
 
-    def steps(self) -> List[int]:
+    def steps(self, snapshot: Optional[Snapshot] = None) -> List[int]:
         out = []
-        for k, _ in self.db.scan(b"ckpt/", 1 << 20):
+        for k, _ in self.db.scan(b"ckpt/", 1 << 20, snapshot=snapshot):
             if k.endswith(b"/meta"):
                 out.append(int(k.split(b"/")[1]))
         return sorted(set(out))
 
-    def latest(self) -> Optional[int]:
-        s = self.steps()
+    def latest(self, snapshot: Optional[Snapshot] = None) -> Optional[int]:
+        s = self.steps(snapshot=snapshot)
         return s[-1] if s else None
 
     def restore(self, step: Optional[int] = None, like: Any = None):
         """Returns (step, tree).  ``like`` supplies the pytree structure
-        (and target shardings — resharding happens on device_put)."""
+        (and target shardings — resharding happens on device_put).
+
+        The whole restore — step listing, manifest read, every chunk
+        read — runs under one pinned snapshot: a save or a retention
+        delete racing the restore can neither tear the tensor data nor
+        yank chunks out from under a manifest already read."""
         import jax
-        step = self.latest() if step is None else step
-        if step is None:
-            return None, None
-        raw = self.db.get(_key_meta(step))
-        if raw is None:
-            raise KeyError(f"no checkpoint at step {step}")
-        manifest = msgpack.unpackb(raw, raw=False)
-        tensors: Dict[str, np.ndarray] = {}
-        for name, info in manifest["tensors"].items():
-            parts = []
-            for i in range(info["chunks"]):
-                blob = self.db.get(_key_chunk(step, name, i))
-                assert blob is not None, (name, i)
-                parts.append(blob)
-            arr = np.frombuffer(b"".join(parts), dtype=info["dtype"]) \
-                .reshape(info["shape"])
-            tensors[name] = arr
+        with self.db.snapshot() as snap:
+            step = self.latest(snapshot=snap) if step is None else step
+            if step is None:
+                return None, None
+            raw = self.db.get(_key_meta(step), snapshot=snap)
+            if raw is None:
+                raise KeyError(f"no checkpoint at step {step}")
+            manifest = msgpack.unpackb(raw, raw=False)
+            tensors: Dict[str, np.ndarray] = {}
+            for name, info in manifest["tensors"].items():
+                parts = []
+                for i in range(info["chunks"]):
+                    blob = self.db.get(_key_chunk(step, name, i),
+                                       snapshot=snap)
+                    assert blob is not None, (name, i)
+                    parts.append(blob)
+                arr = np.frombuffer(b"".join(parts), dtype=info["dtype"]) \
+                    .reshape(info["shape"])
+                tensors[name] = arr
         if like is None:
             return step, tensors
         flat, treedef = jax.tree_util.tree_flatten_with_path(like)
@@ -130,16 +155,19 @@ class CheckpointStore:
             jax.tree_util.tree_structure(like), leaves)
 
     def delete(self, step: int) -> None:
-        """Tombstone all keys of a checkpoint — the shards become exposed
-        garbage for the engine's GC."""
+        """Tombstone all keys of a checkpoint in one batch — the shards
+        become exposed garbage for the engine's GC, and a snapshot
+        reader pinned before the delete still restores the full step."""
         raw = self.db.get(_key_meta(step))
         if raw is None:
             return
         manifest = msgpack.unpackb(raw, raw=False)
+        batch: List[Tuple] = []
         for name, info in manifest["tensors"].items():
             for i in range(info["chunks"]):
-                self.db.delete(_key_chunk(step, name, i))
-        self.db.delete(_key_meta(step))
+                batch.append(("del", _key_chunk(step, name, i)))
+        batch.append(("del", _key_meta(step)))
+        self.db.write_batch(batch)
 
     def _enforce_retention(self) -> None:
         steps = self.steps()

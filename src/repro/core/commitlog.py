@@ -53,6 +53,14 @@ from ..store.blocks import decode_record, decode_varint, encode_varint
 from ..store.device import BlockDevice, IOClass
 from ..store.memtable import WAL, encode_wal_record
 
+#: Reserved shard tag framing a commit sequence number (CSN) stamp in a
+#: shared segment.  The leader allocates one CSN per commit round and
+#: writes ``varint(CSN_TAG) + wal_record(b"", csn, 0, b"")`` at the head
+#: of the round's coalesced append; replay restores ``csn = max(stamps)``.
+#: Far above any plausible shard count, so the stale-superblock
+#: shard-count check in recovery stays meaningful for real tags.
+CSN_TAG = (1 << 20) - 1
+
 
 @dataclasses.dataclass
 class MemtableLog:
@@ -107,6 +115,12 @@ class CommitPipeline:
         self._queue_records = 0
         self._enq = 0
         self._durable = 0
+        # Global commit sequence number: one per commit round (each
+        # coalesced drain or write-through WAL append), allocated by the
+        # leader under the engine lock.  MVCC snapshots record it as the
+        # advisory cross-shard commit point; recovery restores it from
+        # segment stamps and manifest "csn" edits (see version.py).
+        self.csn = 0
         self._open_groups = 0
         self._leader_active = False
         self._client_idents: set = set()     # threads that opened groups
@@ -247,11 +261,14 @@ class SoloCommitSink(CommitPipeline):
             # Only foreground WAL commits count as syncs; out-of-band
             # classes are charged to their own I/O class and governed by
             # the GC limiters already.
-            if self.core is not None and cls == IOClass.WAL:
-                self.core.note_wal_sync(nbytes, 1)
+            if cls == IOClass.WAL:
+                self.csn += 1       # a write-through append is its own round
+                if self.core is not None:
+                    self.core.note_wal_sync(nbytes, 1)
 
     def _drain_write(self, recs: List[bytes], n: int) -> None:
         buf = b"".join(recs)
+        self.csn += 1
         self.device.append(self._wal.fid, buf, IOClass.WAL)
         if self.core is not None:
             self.core.note_wal_sync(len(buf), n)
@@ -322,12 +339,17 @@ class GroupCommitLog(CommitPipeline):
 
     def _write_out(self, recs: List[bytes], n: int, cls: IOClass) -> None:
         buf = b"".join(recs)
-        self.device.append(self.active_fid, buf, cls)
         # Foreground WAL commits only — out-of-band classes (Titan GC
         # write-back) are charged to their own I/O class and already
         # governed by the GC limiters; counting them here would skew
         # wal_syncs/op and feed GC bytes into the governor's foreground
-        # write window.
+        # write window.  Each WAL round gets one CSN, stamped at the head
+        # of the coalesced append so crash replay recovers the counter.
+        if cls == IOClass.WAL:
+            self.csn += 1
+            buf = (encode_varint(CSN_TAG)
+                   + encode_wal_record(b"", self.csn, 0, b"")) + buf
+        self.device.append(self.active_fid, buf, cls)
         if cls == IOClass.WAL:
             self.syncs += 1
             self.records += n
@@ -406,6 +428,10 @@ class SharedCommitSink:
 
     def start(self) -> None:
         pass                    # segments are claimed lazily, on first write
+
+    @property
+    def csn(self) -> int:
+        return self.log.csn
 
     def group(self):
         """The shard-level view of a commit group (delegates to the shared

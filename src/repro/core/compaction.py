@@ -160,7 +160,12 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
     blob_writer: Optional[LogTableWriter] = None
     blob_fid: Optional[int] = None
     new_blob_metas: List = []
-    rewrite_blobs = (opts.kv_separation and opts.gc_mode == "compaction")
+    # Blob rewriting relocates records and can retire the source blob
+    # file; while MVCC snapshots are registered, retained older index
+    # entries may still address it — defer the rewrite (the garbage
+    # survives one compaction; the next one reclaims it).
+    rewrite_blobs = (opts.kv_separation and opts.gc_mode == "compaction"
+                     and not db.snapshots.active)
     # Adaptive placement: compaction is rewriting every input entry
     # anyway, so inline values that have outgrown the (possibly lowered)
     # effective threshold re-separate here — the inline->sep migration
@@ -182,7 +187,7 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
 
     _roll()
     assert writer is not None
-    kept_vt, kept_pl = -1, b""
+    kept_vt, kept_pl, kept_seq = -1, b"", 0
     for entry, newest in merge_entries(streams):
         ukey, seq, vtype, payload = entry
         if not newest:
@@ -194,13 +199,29 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
             # exposed garbage and marks the key hot.
             if vtype == kept_vt and payload == kept_pl:
                 continue
+            # MVCC retention: keep the older version while a registered
+            # snapshot bound separates it from its adjacent newer kept
+            # version (old.seq <= b < kept.seq means a snapshot at b
+            # still reads it).  The retained entry becomes the adjacency
+            # reference for the next older version — the pairwise rule
+            # composes down the whole version chain.
+            if db.snapshots.needs_version(seq, kept_seq):
+                kept_vt, kept_pl, kept_seq = vtype, payload, seq
+                writer.add(entry)
+                if writer.estimated_bytes >= opts.ksst_bytes:
+                    _roll()
+                continue
             if vtype in (VT_INDEX_KA, VT_INDEX_KF):
                 dropped_refs.append((entry_vsst(vtype, payload),
                                      entry_value_size(vtype, payload)))
             db.note_drop(ukey, entry_value_size(vtype, payload))
             continue
-        kept_vt, kept_pl = vtype, payload
-        if vtype == VT_DELETE and is_last:
+        kept_vt, kept_pl, kept_seq = vtype, payload, seq
+        if vtype == VT_DELETE and is_last \
+                and not db.snapshots.has_bound_below(seq):
+            # Dropping a bottom-level tombstone is only safe when no
+            # snapshot can still read an older (retained) version of the
+            # key below it — otherwise the delete would un-happen.
             continue                               # tombstone reaches bottom
         if rewrite_blobs and vtype == VT_INDEX_KA:
             vfid, off, ln = decode_ka(payload)

@@ -2,7 +2,7 @@
 
 The engine stays a discrete-event simulation over one shared clock, but
 client threads may now drive ``write_batch``/``multi_get``/``scan``
-concurrently.  Four lock levels keep that safe; acquire strictly in
+concurrently.  The lock levels keep that safe; acquire strictly in
 increasing level order (skipping levels is fine, reversing is not):
 
 level 0  ``ShardedKVStore.routing`` (:class:`RWLock`)
@@ -12,6 +12,14 @@ level 0  ``ShardedKVStore.routing`` (:class:`RWLock`)
          they ``try_acquire_write`` and defer to the next idle point
          (``release_read`` reports idleness), preserving the old deferred
          -commit semantics of the ``_route_locks`` counter this replaces.
+
+level 0.5  ``ShardedKVStore._apply_gate`` (``RLock``)
+         The MVCC batch-atomicity gate: ``write_batch`` holds it across
+         the whole multi-shard apply loop, ``snapshot()`` holds it while
+         reading the per-shard sequence bounds.  A snapshot's bounds
+         vector therefore sits entirely before or entirely after any
+         batch — cross-shard batches are visible all-or-nothing.  Taken
+         after the routing read hold, before any shard latch.
 
 level 1  ``KVStore.latch`` (per-shard ``RLock``)
          Serializes foreground client ops on one shard's memtable/sink
@@ -26,7 +34,8 @@ level 2  ``SchedulerCore.engine_lock`` (``RLock``)
 
 level 3  Leaf mutexes, never held across a blocking acquire of anything
          above: the commit pipeline's queue lock (``CommitPipeline``),
-         the shared read cache's lock, the rebalancer's accounting lock.
+         the shared read cache's lock, the rebalancer's accounting lock,
+         the snapshot registry's bound-set lock (``core.mvcc``).
 
 Two extra rules close the deadlock surface:
 

@@ -31,6 +31,7 @@ from .commitlog import (GroupCommitLog, MemtableLog, SharedCommitSink,
                         SoloCommitSink)
 from .compaction import execute_compaction, plan_compaction
 from .gc import pick_gc_candidate, run_gc_terark, run_gc_titan
+from .mvcc import Snapshot, SnapshotRegistry
 from .options import Options
 from .placement import PlacementEngine
 from .scheduler import (JOB_COMPACTION, JOB_FLUSH, JOB_GC, Scheduler,
@@ -108,7 +109,13 @@ class KVStore:
         # Read-aware placement: the engine drains the cache's
         # per-size-class read-heat counters at each retune.
         self.placement.read_heat_source = self.cache
-        self.mem = Memtable()
+        self.shard_tag = shard_tag
+        # MVCC: registered snapshot bounds for THIS shard.  The memtable's
+        # retain hook keeps a shadowed version alive exactly while a
+        # registered bound can still read it; compaction and GC consult
+        # the same registry (see core.mvcc).
+        self.snapshots = SnapshotRegistry()
+        self.mem = Memtable(retain=self.snapshots.needs_version)
         if recover and commit_log is None:
             # Replay every WAL logged since the last completed flush,
             # in order (earlier seqs overwritten by later ones).  Replay
@@ -136,12 +143,19 @@ class KVStore:
             self.sink = SoloCommitSink(self.device, core=self.sched.core)
         self.sink.on_open = self._note_wal_open
         self.sink.start()
+        if recover and commit_log is None:
+            # Solo WAL files carry no CSN stamps; the manifest floor is
+            # the best restart point (sharded recovery additionally takes
+            # the max over segment stamps — see ShardedKVStore).
+            self.sink.csn = max(self.sink.csn, self.versions.csn)
         self.immutables: List[Tuple[Memtable, MemtableLog]] = []
         self._readers: Dict[int, object] = {}
         self.stats_counters: Dict[str, float] = {
             "puts": 0, "gets": 0, "deletes": 0, "scans": 0, "flushes": 0,
             "compactions": 0, "gc_runs": 0, "stall_time_s": 0.0,
             "slowdown_time_s": 0.0, "forced_gc": 0, "cap_breaches": 0,
+            "snapshots": 0, "rmw_ops": 0, "rmw_conflicts": 0,
+            "cas_ops": 0, "cas_failures": 0,
         }
         self.gc_step_time: Dict[str, float] = {c.value: 0.0
                                                for c in GC_STEP_CLASSES}
@@ -204,16 +218,23 @@ class KVStore:
                     else:
                         self.delete(op[1])
 
-    def multi_get(self, keys) -> List[Optional[bytes]]:
-        """Point-read a batch of keys; results align with ``keys``."""
-        return [self.get(k) for k in keys]
+    def multi_get(self, keys, *, snapshot: Optional[Snapshot] = None
+                  ) -> List[Optional[bytes]]:
+        """Point-read a batch of keys; results align with ``keys``.
+        Batch-atomic even without a snapshot: the latch is held across
+        all per-key gets (reentrantly), and ``write_batch`` holds it
+        across its whole apply — so a standalone multi_get can never
+        straddle half of a concurrent batch."""
+        with self.latch:
+            return [self.get(k, snapshot=snapshot) for k in keys]
 
     def _note_wal_open(self, fid: int) -> None:
         """The active memtable gained a dependency on log file ``fid`` —
         record it in the manifest so recovery knows to replay it (the
         same edit manifest replay applies, so live and recovered
         pending-WAL state cannot diverge)."""
-        self.versions.apply_edit({"wal": fid, "seq": self.versions.seq})
+        self.versions.apply_edit({"wal": fid, "seq": self.versions.seq,
+                                  "csn": getattr(self.sink, "csn", 0)})
 
     def _write(self, ukey: bytes, vtype: int, payload: bytes) -> None:
         self.sched.pump()
@@ -261,7 +282,7 @@ class KVStore:
     def _rotate_memtable(self) -> None:
         handle = self.sink.rotate()
         self.immutables.append((self.mem, handle))
-        self.mem = Memtable()
+        self.mem = Memtable(retain=self.snapshots.needs_version)
         self.maybe_schedule_background()
 
     # -- stalls ----------------------------------------------------------
@@ -303,23 +324,39 @@ class KVStore:
     # Read path
     # ==================================================================
 
-    def mem_lookup(self, ukey: bytes) -> Optional[Tuple[int, int, bytes]]:
-        v = self.mem.get(ukey)
+    def mem_lookup(self, ukey: bytes, bound: Optional[int] = None
+                   ) -> Optional[Tuple[int, int, bytes]]:
+        if bound is None:
+            v = self.mem.get(ukey)
+            if v is not None:
+                return v
+            for m, _ in reversed(self.immutables):
+                v = m.get(ukey)
+                if v is not None:
+                    return v
+            return None
+        v = self.mem.get_at(ukey, bound)
         if v is not None:
             return v
         for m, _ in reversed(self.immutables):
-            v = m.get(ukey)
+            v = m.get_at(ukey, bound)
             if v is not None:
                 return v
         return None
 
-    def get_entry(self, ukey: bytes, cls: IOClass) -> Optional[Entry]:
+    def get_entry(self, ukey: bytes, cls: IOClass,
+                  max_seq: Optional[int] = None) -> Optional[Entry]:
         """Index-LSM point lookup: memtable → immutables → L0 → L1+.
+
+        With ``max_seq`` (a snapshot bound), each source yields its newest
+        version with ``seq <= max_seq``; a key's versions are distributed
+        monotonically across the sources (flush order), so the FIRST
+        source holding any visible version holds the newest visible one.
 
         GC passes GC_LOOKUP here — on DTables the probe touches only
         high-priority index-entry blocks (paper III-B.2)."""
         self.device.charge_cpu()
-        v = self.mem_lookup(ukey)
+        v = self.mem_lookup(ukey, max_seq)
         if v is not None:
             seq, vtype, payload = v
             return (ukey, seq, vtype, payload)
@@ -328,7 +365,7 @@ class KVStore:
             if f.smallest <= ukey <= f.largest:
                 r = self.reader(f.fid, cls)
                 e = (r.get_index_entry(ukey, cls) if use_idx_probe
-                     else r.get(ukey, cls))
+                     else r.get(ukey, cls, max_seq))
                 if e is not None:
                     return e
         for level in range(1, self.versions.num_levels):
@@ -352,29 +389,128 @@ class KVStore:
             for cand in cands:
                 r = self.reader(cand.fid, cls)
                 e = (r.get_index_entry(ukey, cls) if use_idx_probe
-                     else r.get(ukey, cls))
+                     else r.get(ukey, cls, max_seq))
                 if e is not None and (best is None or e[1] > best[1]):
                     best = e
             if best is not None:
                 return best
         return None
 
-    def get(self, ukey: bytes) -> Optional[bytes]:
-        return self.get_present(ukey)[1]
+    def _snap_bound(self, snapshot: Optional[Snapshot]) -> Optional[int]:
+        return None if snapshot is None else snapshot.bounds[self.shard_tag]
 
-    def get_present(self, ukey: bytes) -> Tuple[bool, Optional[bytes]]:
+    def get(self, ukey: bytes, *,
+            snapshot: Optional[Snapshot] = None) -> Optional[bytes]:
+        """Point read; ``snapshot`` pins it to the snapshot's bound for
+        this shard (the newest version with ``seq <= bound``)."""
+        return self.get_present(ukey, snapshot=snapshot)[1]
+
+    def contains(self, ukey: bytes, *,
+                 snapshot: Optional[Snapshot] = None) -> bool:
+        """Presence check: does ``ukey`` have a live (non-tombstone)
+        version — under ``snapshot`` if given?  Cheaper than ``get`` for
+        separated values: the index entry decides, no value hop."""
+        with self._fg():
+            self.sched.pump()
+            self.stats_counters["gets"] += 1
+            e = self.get_entry(ukey, IOClass.USER_READ,
+                               self._snap_bound(snapshot))
+            return e is not None and e[2] != VT_DELETE
+
+    def get_present(self, ukey: bytes, *,
+                    snapshot: Optional[Snapshot] = None
+                    ) -> Tuple[bool, Optional[bytes]]:
         """Point read that distinguishes *no entry anywhere* ``(False,
         None)`` from a present entry ``(True, value)`` — a tombstone is
         present with value ``None``.  The sharded front-end uses the
         presence bit to dual-route reads during a slot migration (a
-        source tombstone must win over a stale copy on the target)."""
+        source tombstone must win over a stale copy on the target).
+
+        DEPRECATED as public API: use ``get(key, snapshot=...)`` for
+        values and ``contains`` for presence; this shim remains for the
+        rebalancer's dual-routing internals."""
         with self._fg():
             self.sched.pump()
             self.stats_counters["gets"] += 1
-            e = self.get_entry(ukey, IOClass.USER_READ)
+            e = self.get_entry(ukey, IOClass.USER_READ,
+                               self._snap_bound(snapshot))
             if e is None:
                 return False, None
             return True, self._resolve_value(e, IOClass.USER_READ)
+
+    # -- MVCC snapshots + conditional writes -----------------------------
+
+    def snapshot(self) -> Snapshot:
+        """Pin a consistent read view at the current applied sequence.
+        The latch serializes capture against ``write_batch`` (which holds
+        it across the whole batch), so a batch is never half-visible."""
+        with self._fg():
+            bound = self.versions.seq
+            self.snapshots.register(bound)
+            self.stats_counters["snapshots"] += 1
+            csn = getattr(self.sink, "csn", 0)
+        bounds = [0] * (self.shard_tag + 1)
+        bounds[self.shard_tag] = bound
+        return Snapshot(self, bounds, csn)
+
+    def _release_snapshot(self, snap: Snapshot) -> None:
+        with self.sched.core.engine_lock:
+            self.snapshots.unregister(snap.bounds[self.shard_tag])
+            # Anything GC skipped while this bound was registered is
+            # re-evaluated at the next scheduling tick.
+            self._gc_check_pending = True
+
+    def read_modify_write(self, ukey: bytes,
+                          fn: Callable[[Optional[bytes]], Optional[bytes]],
+                          max_retries: int = 64) -> Optional[bytes]:
+        """Atomic read-modify-write: read the current value, apply ``fn``
+        outside any lock, then commit the result only if the key's newest
+        sequence is unchanged — else retry with the fresh value (optimistic
+        concurrency; conflicts counted in ``stats()["counters"]``).
+        ``fn`` returning ``None`` deletes the key.  The validated write
+        rides the commit pipeline like any batch record."""
+        for _ in range(max_retries):
+            with self._fg():
+                self.sched.pump()
+                self.stats_counters["gets"] += 1
+                e = self.get_entry(ukey, IOClass.USER_READ)
+                token = e[1] if e is not None else 0
+                cur = self._resolve_value(e, IOClass.USER_READ)
+            new = fn(cur)
+            with self.sink.group():
+                with self._fg():
+                    e2 = self.get_entry(ukey, IOClass.USER_READ)
+                    if (e2[1] if e2 is not None else 0) != token:
+                        self.stats_counters["rmw_conflicts"] += 1
+                        continue
+                    if new is None:
+                        self._write(ukey, VT_DELETE, b"")
+                    else:
+                        self._write(ukey, VT_VALUE, new)
+                    self.stats_counters["rmw_ops"] += 1
+                    return new
+        raise RuntimeError(f"read_modify_write: {max_retries} consecutive "
+                           f"conflicts on {ukey!r}")
+
+    def compare_and_swap(self, ukey: bytes, expected: Optional[bytes],
+                         new: Optional[bytes]) -> bool:
+        """Write ``new`` iff the key's current value equals ``expected``
+        (``None`` = absent/deleted on either side).  Single attempt; the
+        compare and the write share one foreground lock span."""
+        with self.sink.group():
+            with self._fg():
+                self.sched.pump()
+                self.stats_counters["cas_ops"] += 1
+                e = self.get_entry(ukey, IOClass.USER_READ)
+                cur = self._resolve_value(e, IOClass.USER_READ)
+                if cur != expected:
+                    self.stats_counters["cas_failures"] += 1
+                    return False
+                if new is None:
+                    self._write(ukey, VT_DELETE, b"")
+                else:
+                    self._write(ukey, VT_VALUE, new)
+                return True
 
     def _resolve_value(self, e: Optional[Entry], cls: IOClass
                        ) -> Optional[bytes]:
@@ -425,50 +561,63 @@ class KVStore:
         return None
 
     def entry_streams(self, start: bytes,
-                      cls: IOClass = IOClass.USER_READ
-                      ) -> List[Iterator[Entry]]:
+                      cls: IOClass = IOClass.USER_READ,
+                      bound: Optional[int] = None) -> List[Iterator[Entry]]:
         """The store's merged-iteration sources from ``start``: active +
         immutable memtables, each L0 file, and one chained stream per
         deeper level — every stream sorted by (key asc, seq desc).
         Shared by the user scan and the migration slot copy (which reads
         with the GC I/O class), so level-iteration semantics cannot
-        diverge between the two."""
+        diverge between the two.  ``bound`` (a snapshot's seq bound for
+        this shard) filters every stream to ``seq <= bound`` *before* the
+        caller's newest-wins dedup, and includes the memtables' retained
+        version history."""
         streams: List[Iterator[Entry]] = []
 
         def mem_stream(m: Memtable) -> Iterator[Entry]:
-            for k, (seq, vt, pl) in m.sorted_items():
-                if k >= start:
+            it = m.sorted_items() if bound is None else m.sorted_entries()
+            for k, (seq, vt, pl) in it:
+                if k >= start and (bound is None or seq <= bound):
                     yield (k, seq, vt, pl)
+
+        def bounded(it: Iterator[Entry]) -> Iterator[Entry]:
+            if bound is None:
+                return it
+            return (e for e in it if e[1] <= bound)
 
         streams.append(mem_stream(self.mem))
         for m, _ in self.immutables:
             streams.append(mem_stream(m))
         for f in self.versions.levels[0]:
             if f.largest >= start:
-                streams.append(self.reader(f.fid, cls)
-                               .iter_from(start, cls))
+                streams.append(bounded(self.reader(f.fid, cls)
+                                       .iter_from(start, cls)))
         for level in range(1, self.versions.num_levels):
             files = [f for f in self.versions.levels[level]
                      if f.largest >= start]
             if files:
-                streams.append(self._level_stream(files, start, cls))
+                streams.append(bounded(self._level_stream(files, start,
+                                                          cls)))
         return streams
 
     def scan(self, start: bytes, count: int,
-             accept: Optional[Callable[[bytes], bool]] = None
+             accept: Optional[Callable[[bytes], bool]] = None,
+             *, snapshot: Optional[Snapshot] = None
              ) -> List[Tuple[bytes, bytes]]:
         """Range scan: merged iteration over memtables and all levels,
         resolving separated values through the value store.  ``accept``
         filters *keys* before their value is resolved — the sharded
         front-end passes a routing filter here so migration copies and
-        orphans neither cost value reads nor consume the budget."""
+        orphans neither cost value reads nor consume the budget.
+        ``snapshot`` pins the scan to its seq bound for this shard."""
         with self._fg():
             self.sched.pump()
             self.stats_counters["scans"] += 1
             out: List[Tuple[bytes, bytes]] = []
             prev: Optional[bytes] = None
-            for e in _heapq.merge(*self.entry_streams(start,
-                                                      IOClass.USER_READ),
+            for e in _heapq.merge(*self.entry_streams(
+                                      start, IOClass.USER_READ,
+                                      self._snap_bound(snapshot)),
                                   key=lambda e: (e[0], -e[1])):
                 if e[0] == prev:
                     continue
@@ -678,8 +827,26 @@ class KVStore:
                 vws[hot] = (fid, w)
             return fid, w
 
-        for ukey, (seq, vtype, payload) in imm.sorted_items():
-            if (vtype == VT_VALUE and opts.kv_separation
+        prev_key: Optional[bytes] = None
+        for ukey, (seq, vtype, payload) in imm.sorted_entries():
+            newest = ukey != prev_key
+            prev_key = ukey
+            # Roll output tables only at key boundaries: splitting one
+            # key's version run across two L0 files would break the
+            # newest-first L0 probe (the younger fid — holding the OLDER
+            # spillover versions — sorts first).
+            if newest and kw.estimated_bytes >= opts.ksst_bytes:
+                fid, props = kw.finish(IOClass.FLUSH)
+                flushed_bytes += props["file_size"]
+                ksst_writers.append((fid, props))
+                kw = KTableWriter(self.device, opts.block_bytes,
+                                  dtable=(opts.ksst_format == "dtable"),
+                                  bits_per_key=opts.bits_per_key)
+            # Snapshot-retained history versions (non-newest) are written
+            # out verbatim — they are doomed duplicates that compaction
+            # drops once their snapshots release, so separating them
+            # would only mint value-store garbage.
+            if (newest and vtype == VT_VALUE and opts.kv_separation
                     and self.placement.decide(ukey, len(payload))):
                 hot = opts.dropcache and self.dropcache.is_hot(ukey)
                 vfid, vw = _vwriter(hot)
@@ -694,13 +861,6 @@ class KVStore:
             else:
                 entry = (ukey, seq, vtype, payload)
             kw.add(entry)
-            if kw.estimated_bytes >= opts.ksst_bytes:
-                fid, props = kw.finish(IOClass.FLUSH)
-                flushed_bytes += props["file_size"]
-                ksst_writers.append((fid, props))
-                kw = KTableWriter(self.device, opts.block_bytes,
-                                  dtable=(opts.ksst_format == "dtable"),
-                                  bits_per_key=opts.bits_per_key)
         _seal_v(True)
         _seal_v(False)
         if kw.num_entries:
@@ -711,9 +871,18 @@ class KVStore:
         def effects(elapsed: float = 0.0) -> None:
             metas = [self.make_ksst_meta(fid, props, 0)
                      for fid, props in ksst_writers]
+            # "seq" persists the sequence floor: once this flush lets the
+            # segments holding these records be deleted, the manifest is
+            # the only record of how far the shard's seqs reached — a
+            # recovery that restarted below it would re-issue seqs that
+            # compaction's (key, -seq) merge order treats as OLDER than
+            # the flushed entries (and snapshot bounds would wrongly
+            # filter flushed data).  Same rationale as "csn".
             self.versions.log_and_apply({
                 "add_ksst": [(0, m) for m in metas],
                 "add_vsst": vsst_metas,
+                "seq": self.versions.seq,
+                "csn": getattr(self.sink, "csn", 0),
             })
             if self.immutables and self.immutables[0][0] is imm:
                 self.immutables.pop(0)
@@ -815,6 +984,10 @@ class KVStore:
             # shard), so read it once at the front-end, not per shard.
             "wal": self.sched.core.wal_stats(),
             "bg_write_bytes": self.sched.core.bg_write_stats(),
+            # MVCC: the advisory global commit sequence this store has
+            # seen and the snapshot bounds currently pinning versions.
+            "mvcc": {"csn": getattr(self.sink, "csn", 0),
+                     "active_snapshots": self.snapshots.count},
             "dropcache": {"size": len(self.dropcache),
                           "inserts": self.dropcache.inserts,
                           "hit_rate": (self.dropcache.hits /

@@ -37,7 +37,15 @@ def pick_gc_candidate(db, forced: bool = False) -> Optional[VSSTMeta]:
     Standalone GC triggers when the *global* garbage ratio exceeds R_G
     (TerarkDB policy); ``forced`` (space-cap stall) picks the best file
     regardless of the global trigger.
+
+    MVCC gate (Titan's oldest-snapshot rule): while any snapshot bound
+    is registered, GC admits nothing — both GC flavors delete the victim
+    vSST, and a snapshot-retained index entry may still address records
+    in it.  Snapshot release sets ``_gc_check_pending`` so the deferred
+    work is re-offered at the next scheduling tick.
     """
+    if db.snapshots.active:
+        return None
     vs = db.versions
     cands = [m for m in vs.vssts.values()
              if not m.being_gc and not m.pending_delete and m.num_entries > 0]

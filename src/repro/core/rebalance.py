@@ -225,6 +225,22 @@ class Rebalancer:
             if wd is not None:
                 wd.add(ukey)
 
+    def routing_view(self) -> Tuple[int, List[int], Dict[int, int]]:
+        """One consistent ``(epoch, slot_map, inflight)`` triple — what a
+        cross-shard MVCC snapshot captures.  Must be called with the
+        routing guard held (read side suffices: epoch commits take the
+        write side, so the triple cannot change mid-copy).
+
+        Snapshot reads route by the *captured* map and never dual-route:
+        at capture the map's owner held every version ``<=`` that
+        shard's bound, and retention (``core.mvcc``) keeps those
+        versions — catch-up copies land on the target and cleanup
+        tombstones on the source all carry sequences above the bound,
+        so they are invisible to the snapshot even after the epoch
+        flips."""
+        return (self.store.epoch, list(self.store.slot_map),
+                dict(self.inflight))
+
     def is_window_deleted(self, slot: int, ukey: bytes) -> bool:
         with self._acct_mu:
             wd = self.window_deletes.get(slot)

@@ -21,6 +21,13 @@ background-thread pool.  ``ShardedKVStore`` reproduces that topology:
   migration, and the merged scan filters every candidate by the shard its
   key *currently* routes to, so migration copies and pre-cleanup orphans
   never surface twice;
+* cross-shard **MVCC snapshots** (``snapshot()``): one sequence bound
+  per shard captured under the batch *apply gate*, so a multi-shard
+  ``write_batch`` is visible all-or-nothing; ``multi_get`` and the
+  merged ``scan`` pin an implicit snapshot, making them torn-read
+  free, and ``read_modify_write`` / ``compare_and_swap`` give
+  validated atomic updates (YCSB-F) through the same commit pipeline
+  (see :mod:`.mvcc`);
 * all shards commit through one :class:`~.commitlog.GroupCommitLog`:
   a ``write_batch`` opens a commit group so the whole cross-shard batch
   is coalesced into a single framed segment append — **one** WAL sync per
@@ -57,10 +64,12 @@ from typing import (Callable, Dict, Iterable, List, Optional,
 import msgpack
 
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
+from ..store.format import VT_DELETE, VT_VALUE
 from .cache import SharedReadCache
-from .commitlog import GroupCommitLog
+from .commitlog import CSN_TAG, GroupCommitLog
 from .concurrency import RWLock
 from .db import KVStore, validate_batch_ops
+from .mvcc import Snapshot
 from .options import Options
 from .rebalance import (DEFAULT_SLOTS, Rebalancer, default_slot_map, slot_of)
 from .scheduler import Scheduler, SchedulerCore
@@ -102,6 +111,14 @@ class ShardedKVStore:
         # epoch commits need the write side (taken with try_acquire_write
         # only — they defer rather than block).
         self.routing = RWLock()
+        # Apply gate (level 0.5, between routing and the shard latches):
+        # write_batch holds it across the whole multi-shard apply loop and
+        # snapshot capture takes it before reading the per-shard sequence
+        # bounds, so a snapshot's bounds vector can never split a batch —
+        # it observes every shard either before or after the entire batch.
+        self._apply_gate = threading.RLock()
+        self._snapshots_taken = 0
+        self._open_snapshots = 0
         pending_cleanup: Optional[Tuple[int, int, int]] = None
         if recover:
             sb = self._read_superblock()
@@ -174,7 +191,14 @@ class ShardedKVStore:
         preserved; a shard that already flushed a segment's records has
         logged ``wal_done`` and skips it.  Torn tails are tolerated by
         ``GroupCommitLog.replay``; a tag outside the superblock's shard
-        count is a hard error (stale superblock)."""
+        count is a hard error (stale superblock).
+
+        CSN recovery: each coalesced segment append starts with a
+        ``CSN_TAG`` stamp frame carrying the round's commit sequence
+        number; the manifest-persisted per-shard floor covers rounds whose
+        segments were already flushed and deleted.  The recovered CSN is
+        the max over both, so it is monotonic across crashes."""
+        self.commitlog.csn = max(s.versions.csn for s in self.shards)
         pending: Dict[int, set] = {}
         for tag, s in enumerate(self.shards):
             for fid in s.versions.pending_wals:
@@ -194,6 +218,9 @@ class ShardedKVStore:
                         continue
                     for tag, ukey, seq, vtype, payload in \
                             GroupCommitLog.replay(self.device, fid):
+                        if tag == CSN_TAG:
+                            self.commitlog.csn = max(self.commitlog.csn, seq)
+                            continue
                         if tag >= n_shards:
                             raise RuntimeError(
                                 f"commit-log segment {fid} carries shard "
@@ -357,9 +384,41 @@ class ShardedKVStore:
             self.shards[self.slot_map[slot]].delete(ukey)
         self._tick_rebalance()
 
-    def get(self, ukey: bytes) -> Optional[bytes]:
+    def get(self, ukey: bytes, *,
+            snapshot: Optional[Snapshot] = None) -> Optional[bytes]:
+        if snapshot is not None:
+            # Route by the snapshot's *captured* slot map: at capture time
+            # the map's owner was authoritative for every version ≤ the
+            # bound, and it retains them — migration cleanup tombstones
+            # and any epoch flip happened after capture, so their seqs
+            # exceed the shard's bound and are filtered out.  No
+            # dual-routing, no routing guard needed.
+            sid = snapshot.slot_map[self._slot(ukey)]
+            return self.shards[sid].get(ukey, snapshot=snapshot)
         with self._route_guard():
             return self._get_routed(ukey, self.shard_of(ukey))
+
+    def contains(self, ukey: bytes, *,
+                 snapshot: Optional[Snapshot] = None) -> bool:
+        """Presence check (tombstone-aware, no value I/O)."""
+        if snapshot is not None:
+            sid = snapshot.slot_map[self._slot(ukey)]
+            return self.shards[sid].contains(ukey, snapshot=snapshot)
+        with self._route_guard():
+            sid = self.shard_of(ukey)
+            src = self.shards[sid]
+            slot = self._slot(ukey)
+            dst_id = self.rebalancer.inflight.get(slot)
+            if dst_id is None or dst_id == sid:
+                return src.contains(ukey)
+            if src.contains(ukey):
+                return True
+            present, _ = src.get_present(ukey)
+            if present:            # tombstone on the authoritative source
+                return False
+            if self.rebalancer.is_window_deleted(slot, ukey):
+                return False
+            return self.shards[dst_id].contains(ukey)
 
     def _get_routed(self, ukey: bytes, sid: int) -> Optional[bytes]:
         """Point read with migration dual-routing: while a slot's move is
@@ -411,51 +470,80 @@ class ShardedKVStore:
                     self.rebalancer.note_route_delete(slot, op[1])
                 groups[self.slot_map[slot]].append(op)
             with self.commitlog.group():
-                for shard, group in zip(self.shards, groups):
-                    for op in group:
-                        if op[0] == "put":
-                            shard.put(op[1], op[2])
-                        else:
-                            shard.delete(op[1])
+                # Apply gate: snapshot capture serialises against the
+                # whole multi-shard apply, so a bounds vector never
+                # observes shard A post-batch but shard B pre-batch.
+                with self._apply_gate:
+                    for shard, group in zip(self.shards, groups):
+                        for op in group:
+                            if op[0] == "put":
+                                shard.put(op[1], op[2])
+                            else:
+                                shard.delete(op[1])
         self._tick_rebalance(len(ops))
 
-    def multi_get(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
+    def multi_get(self, keys: Sequence[bytes], *,
+                  snapshot: Optional[Snapshot] = None
+                  ) -> List[Optional[bytes]]:
         """Point-read a batch of keys; results align with ``keys``.
         Reads are grouped per shard so each shard serves its keys in one
-        contiguous run (one event-pump per group, cache locality)."""
+        contiguous run (one event-pump per group, cache locality).
+
+        The batch is **torn-read free**: with no explicit snapshot an
+        implicit one is pinned for the call's duration, so a concurrent
+        cross-shard ``write_batch`` is observed either entirely or not at
+        all — never a partial batch."""
+        if snapshot is None:
+            with self.snapshot() as snap:
+                return self.multi_get(keys, snapshot=snap)
         out: List[Optional[bytes]] = [None] * len(keys)
-        with self._route_guard():
-            groups: Dict[int, List[int]] = {}
-            for i, k in enumerate(keys):
-                groups.setdefault(self.shard_of(k), []).append(i)
-            for sid, idxs in groups.items():
-                for i in idxs:
-                    out[i] = self._get_routed(keys[i], sid)
+        groups: Dict[int, List[int]] = {}
+        for i, k in enumerate(keys):
+            sid = snapshot.slot_map[self._slot(k)]
+            groups.setdefault(sid, []).append(i)
+        for sid, idxs in groups.items():
+            shard = self.shards[sid]
+            for i in idxs:
+                out[i] = shard.get(keys[i], snapshot=snapshot)
         return out
 
-    def scan(self, start: bytes, count: int) -> List[Tuple[bytes, bytes]]:
-        """Cross-shard merging scan.  Each shard contributes its ``count``
-        smallest *authoritative* keys ≥ start — candidates whose key no
-        longer routes to that shard (in-flight migration copies on the
-        target, pre-cleanup orphans on a former owner) are filtered out
+    def scan(self, start: bytes, count: int, *,
+             snapshot: Optional[Snapshot] = None
+             ) -> List[Tuple[bytes, bytes]]:
+        """Cross-shard merging scan over a snapshot (an implicit one is
+        pinned when none is given, so the merged view can never tear a
+        concurrent cross-shard batch).  Each shard contributes its
+        ``count`` smallest keys ≥ start that route to it under the
+        snapshot's *captured* slot map — in-flight migration copies on a
+        target and pre-cleanup orphans on a former owner are filtered out
         at the index-entry level inside the shard scan, so junk never
         consumes the budget nor costs value reads.  A surviving key's
         owner shard therefore always lists it within its own top
         ``count``, the streams are pairwise disjoint (a key routes to
         exactly one shard), and a plain k-way merge of the first
-        ``count`` keys is exact.  The routing guard keeps the slot map
-        still across all the per-shard scans, so the filter is
-        consistent shard to shard."""
-        with self._route_guard():
-            streams = [self._authoritative_scan(sid, start, count)
-                       for sid in range(self.n_shards)]
-            merged = _heapq.merge(*streams, key=lambda kv: kv[0])
-            out: List[Tuple[bytes, bytes]] = []
-            for kv in merged:
-                out.append(kv)
-                if len(out) >= count:
-                    break
-            return out
+        ``count`` keys is exact.  The captured map keeps the filter
+        consistent shard to shard without holding the routing guard."""
+        if snapshot is None:
+            with self.snapshot() as snap:
+                return self.scan(start, count, snapshot=snap)
+        streams = [self._snapshot_scan(sid, start, count, snapshot)
+                   for sid in range(self.n_shards)]
+        merged = _heapq.merge(*streams, key=lambda kv: kv[0])
+        out: List[Tuple[bytes, bytes]] = []
+        for kv in merged:
+            out.append(kv)
+            if len(out) >= count:
+                break
+        return out
+
+    def _snapshot_scan(self, sid: int, start: bytes, count: int,
+                       snap: Snapshot) -> List[Tuple[bytes, bytes]]:
+        """``count`` smallest keys ≥ start that route to shard ``sid``
+        under the snapshot's captured slot map, as of its bounds."""
+        return self.shards[sid].scan(
+            start, count,
+            accept=lambda k: snap.slot_map[slot_of(k, self.n_slots)] == sid,
+            snapshot=snap)
 
     def _authoritative_scan(self, sid: int, start: bytes, count: int
                             ) -> List[Tuple[bytes, bytes]]:
@@ -467,6 +555,134 @@ class ShardedKVStore:
         return self.shards[sid].scan(
             start, count,
             accept=lambda k: self.slot_map[slot_of(k, self.n_slots)] == sid)
+
+    # ==================================================================
+    # MVCC snapshots & read-modify-write
+    # ==================================================================
+
+    def snapshot(self) -> Snapshot:
+        """Capture a cross-shard MVCC snapshot: one sequence bound per
+        shard plus the current slot map, in-flight-migration view, epoch
+        and global CSN — all under the routing guard, the apply gate and
+        the engine lock, so the vector is a consistent cut:
+
+        * the apply gate means no ``write_batch`` is mid-apply — a batch
+          is visible on *every* shard or on none (batch atomicity);
+        * the routing guard + engine lock mean the slot map, the
+          rebalancer's in-flight view and the per-shard sequences belong
+          to the same instant — no epoch flip can slide between them.
+
+        The returned handle is a context manager; reads through it
+        (``get``/``multi_get``/``scan``/``contains``) are repeatable until
+        it closes.  While any snapshot is open, value GC is fully gated
+        and compaction retains snapshot-visible versions (see
+        ``core.mvcc``), so long-lived snapshots trade space for the
+        frozen view — close them promptly."""
+        with self._route_guard():
+            with self._apply_gate:
+                with self.sched_core.engine_lock:
+                    bounds = [s.versions.seq for s in self.shards]
+                    for s, b in zip(self.shards, bounds):
+                        s.snapshots.register(b)
+                    csn = self.commitlog.csn
+                    self._snapshots_taken += 1
+                    self._open_snapshots += 1
+                epoch, slot_map, inflight = self.rebalancer.routing_view()
+                snap = Snapshot(self, bounds, csn, slot_map=slot_map,
+                                inflight=inflight, epoch=epoch)
+        return snap
+
+    def _release_snapshot(self, snap: Snapshot) -> None:
+        with self.sched_core.engine_lock:
+            for s, b in zip(self.shards, snap.bounds):
+                s.snapshots.unregister(b)
+                s._gc_check_pending = True
+            self._open_snapshots -= 1
+
+    def read_modify_write(self, ukey: bytes,
+                          fn: Callable[[Optional[bytes]], Optional[bytes]],
+                          max_retries: int = 64) -> Optional[bytes]:
+        """Atomic read-modify-write (YCSB-F): read the key's current
+        value, run ``fn`` on it *outside* any lock, then commit the new
+        value only if the key is unchanged — otherwise retry with the
+        fresh value.  ``fn`` returning ``None`` deletes the key; the
+        return value is what was committed.
+
+        The validation token is the (shard id, entry seq) pair observed by
+        the read, compared under the owning shard's foreground latch
+        inside a commit group — the same write path every other op uses,
+        so the committed record is WAL-durable with the group's sync."""
+        for _ in range(max_retries):
+            with self._route_guard():
+                sid = self.shard_of(ukey)
+                shard = self.shards[sid]
+                with shard._fg():
+                    shard.sched.pump()
+                    shard.stats_counters["gets"] += 1
+                    e = shard.get_entry(ukey, IOClass.USER_READ)
+                    token = (sid, e[1] if e is not None else 0)
+                    cur = shard._resolve_value(e, IOClass.USER_READ)
+            new = fn(cur)
+            committed = False
+            with self._route_guard():
+                sid = self.shard_of(ukey)
+                shard = self.shards[sid]
+                slot = self._slot(ukey)
+                with shard.sink.group():
+                    with shard._fg():
+                        e2 = shard.get_entry(ukey, IOClass.USER_READ)
+                        token2 = (sid, e2[1] if e2 is not None else 0)
+                        if token2 == token:
+                            if new is None:
+                                self.rebalancer.note_delete(slot, ukey)
+                                self.rebalancer.note_route_delete(slot, ukey)
+                                shard._write(ukey, VT_DELETE, b"")
+                            else:
+                                self.rebalancer.note_put(
+                                    slot, ukey, len(ukey) + len(new))
+                                self.rebalancer.note_route_put(slot, ukey)
+                                shard._write(ukey, VT_VALUE, new)
+                            shard.stats_counters["rmw_ops"] += 1
+                            committed = True
+                        else:
+                            shard.stats_counters["rmw_conflicts"] += 1
+            if committed:
+                self._tick_rebalance()
+                return new
+        raise RuntimeError(
+            f"read_modify_write: {max_retries} consecutive conflicts "
+            f"on key {ukey!r}")
+
+    def compare_and_swap(self, ukey: bytes, expected: Optional[bytes],
+                         new: Optional[bytes]) -> bool:
+        """Atomically write ``new`` iff the key's current value equals
+        ``expected`` (``None`` = absent/deleted).  Returns whether the
+        swap happened; validation and write share one latch hold."""
+        with self._route_guard():
+            sid = self.shard_of(ukey)
+            shard = self.shards[sid]
+            slot = self._slot(ukey)
+            with shard.sink.group():
+                with shard._fg():
+                    shard.sched.pump()
+                    shard.stats_counters["cas_ops"] += 1
+                    shard.stats_counters["gets"] += 1
+                    e = shard.get_entry(ukey, IOClass.USER_READ)
+                    cur = shard._resolve_value(e, IOClass.USER_READ)
+                    if cur != expected:
+                        shard.stats_counters["cas_failures"] += 1
+                        return False
+                    if new is None:
+                        self.rebalancer.note_delete(slot, ukey)
+                        self.rebalancer.note_route_delete(slot, ukey)
+                        shard._write(ukey, VT_DELETE, b"")
+                    else:
+                        self.rebalancer.note_put(
+                            slot, ukey, len(ukey) + len(new))
+                        self.rebalancer.note_route_put(slot, ukey)
+                        shard._write(ukey, VT_VALUE, new)
+        self._tick_rebalance()
+        return True
 
     # ==================================================================
     # Lifecycle / background
@@ -535,6 +751,11 @@ class ShardedKVStore:
                 counters[k] = counters.get(k, 0) + v
             for k, v in s.gc_step_time.items():
                 gc_step[k] = gc_step.get(k, 0.0) + v
+        # A cross-shard snapshot registers one bound on every shard; count
+        # it once at the front end (shards' own counters stay at their
+        # solo-API value, normally 0 behind this front end).
+        counters["snapshots"] = counters.get("snapshots", 0) \
+            + self._snapshots_taken
         cache = self.cache.stats()
         # Placement: each shard runs its own engine over its own slice of
         # the key/size population, so tenants with different value-size
@@ -567,6 +788,8 @@ class ShardedKVStore:
             "wal": self.sched_core.wal_stats(),
             "bg_write_bytes": self.sched_core.bg_write_stats(),
             "rebalance": self.rebalancer.stats(),
+            "mvcc": {"csn": self.commitlog.csn,
+                     "active_snapshots": self._open_snapshots},
             "placement": placement,
             "per_shard_counters": [dict(s.stats_counters)
                                    for s in self.shards],

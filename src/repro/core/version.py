@@ -77,6 +77,11 @@ class VersionSet:
         self.group_of: Dict[int, int] = {}      # fid -> gid (kept forever)
         self.group_members: Dict[int, List[int]] = {}  # gid -> live fids
         self.seq = 0
+        # Newest global commit sequence number (CSN) this shard has
+        # persisted (stamped into "wal"-open and flush edits).  WAL
+        # segments are deleted after flush, so the manifest is the CSN's
+        # durable floor; recovery takes max(manifest, segment stamps).
+        self.csn = 0
         self.active_wal: Optional[int] = None
         self.pending_wals: List[int] = []       # logged but not yet flushed
         self.manifest_fid = (device.create() if manifest_fid is None
@@ -188,6 +193,8 @@ class VersionSet:
                     m.remove(fid)
         if "seq" in edit:
             self.seq = max(self.seq, edit["seq"])
+        if "csn" in edit:
+            self.csn = max(self.csn, edit["csn"])
         if "wal" in edit:
             # A solo store logs one WAL file per memtable; a shard of a
             # sharded store logs every shared commit-log *segment* its

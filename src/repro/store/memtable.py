@@ -1,13 +1,18 @@
 """Memtable + write-ahead log.
 
-The memtable keeps the newest version per user key (single-writer engine,
-snapshot isolation is not required by the paper's workloads); a sorted-key
-cache is maintained lazily for flush and range scans.
+The memtable keeps the newest version per user key, plus — only while an
+MVCC snapshot bound spans the overwrite — shadowed older versions in a
+per-key history list.  The ``retain`` hook (injected by the store layer,
+``None`` means "never retain") decides at overwrite time whether the old
+version is still readable by a registered snapshot; unretained versions
+are discarded exactly as before, so with no snapshots active the
+memtable behaves identically to the single-version original.  A
+sorted-key cache is maintained lazily for flush and range scans.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 from .blocks import decode_record, encode_record, encode_varint, decode_varint
 from .device import BlockDevice, IOClass
@@ -16,9 +21,12 @@ Versioned = Tuple[int, int, bytes]  # (seq, vtype, payload)
 
 
 class Memtable:
-    def __init__(self) -> None:
+    def __init__(self, retain: Optional[Callable[[int, int], bool]] = None
+                 ) -> None:
         self._data: Dict[bytes, Versioned] = {}
+        self._hist: Dict[bytes, List[Versioned]] = {}   # newest-first
         self._sorted: Optional[List[bytes]] = None
+        self.retain = retain        # retain(old_seq, new_seq) -> keep old?
         self.approx_bytes = 0
 
     def put(self, ukey: bytes, seq: int, vtype: int, payload: bytes) -> None:
@@ -26,6 +34,8 @@ class Memtable:
         if old is None:
             self._sorted = None
             self.approx_bytes += len(ukey) + 16
+        elif self.retain is not None and self.retain(old[0], seq):
+            self._hist.setdefault(ukey, []).insert(0, old)
         else:
             self.approx_bytes -= len(old[2])
         self._data[ukey] = (seq, vtype, payload)
@@ -34,14 +44,40 @@ class Memtable:
     def get(self, ukey: bytes) -> Optional[Versioned]:
         return self._data.get(ukey)
 
+    def get_at(self, ukey: bytes, bound: int) -> Optional[Versioned]:
+        """Newest version with ``seq <= bound``, or None if every version
+        of the key here is newer (caller falls through to older sources —
+        a key's versions are distributed monotonically across memtable →
+        immutables → L0 → deeper levels, so the first source holding ANY
+        version ``<= bound`` holds the visible one)."""
+        v = self._data.get(ukey)
+        if v is not None and v[0] <= bound:
+            return v
+        for h in self._hist.get(ukey, ()):
+            if h[0] <= bound:
+                return h
+        return None
+
     def __len__(self) -> int:
         return len(self._data)
 
     def sorted_items(self) -> Iterator[Tuple[bytes, Versioned]]:
+        """Newest version per key, key-ascending (history excluded)."""
         if self._sorted is None:
             self._sorted = sorted(self._data)
         for k in self._sorted:
             yield k, self._data[k]
+
+    def sorted_entries(self) -> Iterator[Tuple[bytes, Versioned]]:
+        """All resident versions in (key asc, seq desc) order — what
+        flush writes out so snapshot-retained history survives the
+        memtable's death."""
+        if self._sorted is None:
+            self._sorted = sorted(self._data)
+        for k in self._sorted:
+            yield k, self._data[k]
+            for h in self._hist.get(k, ()):
+                yield k, h
 
 
 def encode_wal_record(ukey: bytes, seq: int, vtype: int,

@@ -431,33 +431,54 @@ class KTableReader:
 
     def _get_in(self, index: List[Tuple[bytes, bytes, int, int]],
                 bloom: Optional[BloomFilter], ukey: bytes, cls: IOClass,
-                high_priority: bool) -> Optional[Entry]:
+                high_priority: bool,
+                max_seq: Optional[int] = None) -> Optional[Entry]:
         if bloom is not None and not bloom.may_contain(ukey):
             self.device.charge_cpu()
             return None
-        loc = self._find_block(index, ukey)
-        if loc is None:
+        lasts = [e[1] for e in index]
+        i = bisect_left(lasts, ukey)
+        if i >= len(index) or ukey < index[i][0]:
+            # Gap between block i-1's last key and block i's first: no
+            # block can contain the key; skip the wasted read.
             return None
-        entries = self._load_block(loc[0], loc[1], cls, high_priority)
         best: Optional[Entry] = None
-        for e in entries:
-            if e[0] == ukey and (best is None or e[1] > best[1]):
-                best = e
+        while True:
+            _, _, off, ln = index[i]
+            entries = self._load_block(off, ln, cls, high_priority)
+            for e in entries:
+                if e[0] == ukey and (max_seq is None or e[1] <= max_seq) \
+                        and (best is None or e[1] > best[1]):
+                    best = e
+            if best is not None or max_seq is None:
+                break
+            # Snapshot probe: the bisect lands on the block holding the
+            # key's NEWEST versions; with a seq bound, older (visible)
+            # duplicates may spill into following blocks.
+            i += 1
+            if i >= len(index) or index[i][0] != ukey:
+                break
         return best
 
-    def get(self, ukey: bytes, cls: IOClass = IOClass.USER_READ) -> Optional[Entry]:
+    def get(self, ukey: bytes, cls: IOClass = IOClass.USER_READ,
+            max_seq: Optional[int] = None) -> Optional[Entry]:
+        """Newest entry for ``ukey`` (optionally with ``seq <= max_seq``
+        for snapshot reads)."""
         if self.ttype == TABLE_DTABLE:
             # Index-entry section first (it holds KA/KF entries, which is
             # what both GC-Lookup and large-value foreground reads want),
             # then the small-KV data section.
-            e1 = self._get_in(self.idxe_idx, self.bloom_i, ukey, cls, True)
-            e2 = self._get_in(self.data_idx, self.bloom_d, ukey, cls, False)
+            e1 = self._get_in(self.idxe_idx, self.bloom_i, ukey, cls, True,
+                              max_seq)
+            e2 = self._get_in(self.data_idx, self.bloom_d, ukey, cls, False,
+                              max_seq)
             if e1 is None:
                 return e2
             if e2 is None:
                 return e1
             return e1 if e1[1] >= e2[1] else e2
-        return self._get_in(self.data_idx, self.bloom_d, ukey, cls, False)
+        return self._get_in(self.data_idx, self.bloom_d, ukey, cls, False,
+                            max_seq)
 
     def get_index_entry(self, ukey: bytes,
                         cls: IOClass = IOClass.GC_LOOKUP) -> Optional[Entry]:

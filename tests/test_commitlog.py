@@ -218,7 +218,11 @@ def test_solo_write_batch_crash_recovery():
 
 def test_group_commit_log_replay_roundtrip():
     """Unit: framed records round-trip through a segment, preserving
-    per-shard order and tags."""
+    per-shard order and tags.  Each coalesced append is headed by one
+    CSN stamp frame (reserved tag) carrying the round's commit sequence
+    number in its seq field."""
+    from repro.core.commitlog import CSN_TAG
+
     device = BlockDevice()
     log = GroupCommitLog(device)
     recs = [(t, b"key%d" % i, 100 + i, 1, b"payload%d" % i)
@@ -228,4 +232,7 @@ def test_group_commit_log_replay_roundtrip():
             log.append(t, k, seq, vt, pl)
     assert log.syncs == 1 and log.records == len(recs)
     got = list(GroupCommitLog.replay(device, log.active_fid))
-    assert got == recs
+    stamps = [r for r in got if r[0] == CSN_TAG]
+    assert stamps == [(CSN_TAG, b"", log.csn, 0, b"")]   # one round, CSN 1
+    assert log.csn == 1
+    assert [r for r in got if r[0] != CSN_TAG] == recs

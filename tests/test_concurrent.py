@@ -304,3 +304,69 @@ def test_stress_concurrent_ops_during_migration():
     keys = [k for k, _ in got]
     assert len(keys) == len(set(keys))
     assert len(keys) == len(vals) + n_writers * 4 * w_ops
+
+
+# =====================================================================
+# Torn-read regression: batch atomicity for readers (MVCC snapshots)
+# =====================================================================
+
+def test_no_torn_reads_across_shards_under_batch_storm():
+    """A cross-shard ``write_batch`` must be *visible* all-or-nothing:
+    ``multi_get`` and the merged ``scan`` (which pin an implicit MVCC
+    snapshot) may never observe some keys from round N and others from
+    round N-1, no matter how the pipelined group commit interleaves the
+    per-shard applies."""
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=4)
+    keys = [b"torn%04d" % i for i in range(16)]
+    # every round writes the SAME value to all keys — a mixed read is a
+    # torn batch, full stop
+    db.write_batch([("put", k, b"round%06d" % 0) for k in keys])
+    stop = threading.Event()
+    errs = []
+    barrier = threading.Barrier(3)
+
+    def writer():
+        try:
+            barrier.wait()
+            for r in range(1, 150):
+                db.write_batch([("put", k, b"round%06d" % r)
+                                for k in keys])
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+        finally:
+            stop.set()
+
+    def mg_reader():
+        try:
+            barrier.wait()
+            while not stop.is_set():
+                vals = db.multi_get(keys)
+                if len(set(vals)) != 1:
+                    errs.append(AssertionError(
+                        "torn multi_get: %r" % sorted(set(vals))))
+                    return
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    def scanner():
+        try:
+            barrier.wait()
+            while not stop.is_set():
+                got = db.scan(b"torn", len(keys))
+                vals = {v for _, v in got}
+                if len(got) != len(keys) or len(vals) != 1:
+                    errs.append(AssertionError(
+                        "torn scan: %d keys, vals %r"
+                        % (len(got), sorted(vals))))
+                    return
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    _run_all([threading.Thread(target=writer),
+              threading.Thread(target=mg_reader),
+              threading.Thread(target=scanner)])
+    assert not errs, errs
+    db.drain()
+    assert set(db.multi_get(keys)) == {b"round%06d" % 149}
+    # every snapshot was released: GC/retention fully re-armed
+    assert db.stats()["mvcc"]["active_snapshots"] == 0

@@ -1,0 +1,280 @@
+"""Cross-shard MVCC snapshots, read-modify-write / compare-and-swap and
+the unified Store protocol: pinned reads survive overwrites, flushes,
+compactions and in-flight slot migrations; CSNs stay monotonic across
+crash recovery; snapshot-pinned checkpoint backups are batch-consistent
+under a concurrent write storm."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import KVStore, ShardedKVStore, Snapshot, Store, preset
+from repro.core.options import Options
+
+JOIN_S = 120
+
+
+def _run_all(threads):
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(JOIN_S)
+        assert not t.is_alive(), "worker deadlocked"
+
+
+# =====================================================================
+# Store protocol
+# =====================================================================
+
+def test_both_engines_satisfy_store_protocol():
+    solo = KVStore(preset("scavenger_plus"))
+    sharded = ShardedKVStore(preset("scavenger_plus"), n_shards=2)
+    assert isinstance(solo, Store)
+    assert isinstance(sharded, Store)
+
+
+def test_get_present_is_a_deprecated_contains_shim():
+    db = KVStore(preset("scavenger_plus"))
+    db.put(b"a", b"1")
+    db.delete(b"b")
+    assert db.get_present(b"a") == (True, b"1")
+    assert db.get_present(b"b") == (True, None)     # tombstone: present
+    assert db.get_present(b"c") == (False, None)
+    assert db.contains(b"a") is True
+    assert db.contains(b"b") is False               # tombstone: absent
+    assert db.contains(b"c") is False
+
+
+# =====================================================================
+# Solo snapshots
+# =====================================================================
+
+def test_solo_snapshot_pins_point_reads_and_scans():
+    db = KVStore(preset("scavenger_plus"))
+    for i in range(50):
+        db.put(b"k%04d" % i, b"old%04d" % i)
+    with db.snapshot() as snap:
+        assert len(snap.bounds) == 1
+        db.put(b"k0001", b"NEW")
+        db.delete(b"k0002")
+        db.put(b"k9999", b"born-late")
+        assert snap.get(b"k0001") == b"old0001"
+        assert snap.get(b"k0002") == b"old0002"
+        assert snap.get(b"k9999") is None
+        assert snap.contains(b"k0002") is True
+        got = dict(snap.scan(b"k", 100))
+        assert got[b"k0001"] == b"old0001"
+        assert got[b"k0002"] == b"old0002"
+        assert b"k9999" not in got
+        # live reads are unaffected
+        assert db.get(b"k0001") == b"NEW"
+        assert db.get(b"k0002") is None
+    assert snap.closed
+    assert db.stats()["mvcc"]["active_snapshots"] == 0
+    # released: live view everywhere
+    assert db.get(b"k0001") == b"NEW"
+
+
+def test_solo_snapshot_survives_flush_and_compaction():
+    db = KVStore(preset("scavenger_plus", memtable_bytes=8 << 10,
+                        ksst_bytes=8 << 10))
+    val = b"v" * 256
+    for i in range(40):
+        db.put(b"s%04d" % i, val + b"%04d" % i)
+    db.flush_all()
+    with db.snapshot() as snap:
+        # overwrite everything several times, forcing flushes and
+        # compactions that must RETAIN the snapshot-visible versions
+        for r in range(4):
+            for i in range(40):
+                db.put(b"s%04d" % i, b"w%d" % r * 128)
+            db.flush_all()
+        db.drain()
+        for i in range(40):
+            assert snap.get(b"s%04d" % i) == val + b"%04d" % i, i
+        got = dict(snap.scan(b"s", 100))
+        assert len(got) == 40
+        assert all(v == val + k[-4:] for k, v in got.items())
+    db.drain()
+    for i in range(40):
+        assert db.get(b"s%04d" % i) == b"w3" * 128
+
+
+# =====================================================================
+# Sharded snapshots
+# =====================================================================
+
+def test_sharded_snapshot_is_batch_consistent():
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=4)
+    keys = [b"b%04d" % i for i in range(32)]
+    db.write_batch([("put", k, b"r0") for k in keys])
+    with db.snapshot() as snap:
+        db.write_batch([("put", k, b"r1") for k in keys])
+        assert set(snap.multi_get(keys)) == {b"r0"}
+        assert {v for _, v in snap.scan(b"b", 64)} == {b"r0"}
+        assert [snap.get(k) for k in keys] == [b"r0"] * len(keys)
+    assert set(db.multi_get(keys)) == {b"r1"}
+
+
+def test_sharded_snapshot_held_across_slot_migration():
+    db = ShardedKVStore(preset("scavenger_plus", num_slots=64), n_shards=4)
+    vals = {}
+    for i in range(200):
+        k = b"mv%05d" % i
+        vals[k] = b"%05d" % i * 20
+        db.put(k, vals[k])
+    with db.snapshot() as snap:
+        slot = next(s for s, o in enumerate(db.slot_map) if o == 0)
+        assert db.rebalancer.start_migration(slot, 1)
+        # overwrite everything while the move is in flight, then let the
+        # migration commit its epoch flip and clean up the source copies
+        for k in vals:
+            db.put(k, b"post-move")
+        db.drain()
+        assert db.rebalancer.inflight == {}
+        assert db.slot_map[slot] == 1          # routing really flipped
+        # the snapshot still reads the captured epoch: every key at its
+        # pre-migration, pre-overwrite value — via the old owner
+        for k, v in vals.items():
+            assert snap.get(k) == v, k
+        got = dict(snap.scan(b"mv", 300))
+        assert got == vals
+    db.drain()
+    for k in vals:
+        assert db.get(k) == b"post-move"
+
+
+def test_snapshot_csn_and_recovery_monotonic():
+    from repro.store.device import BlockDevice
+    device = BlockDevice()
+    db = ShardedKVStore(preset("scavenger_plus"), n_shards=3,
+                        device=device)
+    for r in range(5):
+        db.write_batch([("put", b"c%03d-%d" % (i, r), b"v") for i in
+                        range(30)])
+    with db.snapshot() as s1:
+        csn1 = s1.csn
+    assert csn1 >= 5                    # one CSN per commit round, min.
+    assert db.stats()["mvcc"]["csn"] == db.commitlog.csn
+    db2 = ShardedKVStore(preset("scavenger_plus"), device=device,
+                         recover=True)
+    assert db2.commitlog.csn >= csn1    # survives the crash
+    db2.write_batch([("put", b"after", b"v")])
+    with db2.snapshot() as s2:
+        assert s2.csn > csn1            # and keeps advancing
+    # flush (deletes replayed segments), crash again: manifest floor holds
+    db2.flush_all()
+    csn2 = db2.commitlog.csn
+    db3 = ShardedKVStore(preset("scavenger_plus"), device=device,
+                         recover=True)
+    assert db3.commitlog.csn >= csn2
+    assert db3.get(b"after") == b"v"
+
+
+# =====================================================================
+# read_modify_write / compare_and_swap
+# =====================================================================
+
+def _incr(v):
+    return b"%08d" % (int((v or b"0").decode()) + 1)
+
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_rmw_concurrent_increments_lose_nothing(sharded):
+    db = (ShardedKVStore(preset("scavenger_plus"), n_shards=4) if sharded
+          else KVStore(preset("scavenger_plus")))
+    n_threads, per = 4, 50
+    keys = [b"ctr%02d" % i for i in range(4)]
+    barrier = threading.Barrier(n_threads)
+    errs = []
+
+    def worker():
+        try:
+            barrier.wait()
+            for i in range(per):
+                db.read_modify_write(keys[i % len(keys)], _incr)
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    _run_all([threading.Thread(target=worker) for _ in range(n_threads)])
+    assert not errs, errs
+    db.drain()
+    total = sum(int(db.get(k).decode()) for k in keys)
+    assert total == n_threads * per     # no lost updates
+    c = db.stats()["counters"]
+    assert c["rmw_ops"] == n_threads * per
+    assert c["rmw_conflicts"] >= 0
+
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_rmw_delete_and_cas(sharded):
+    db = (ShardedKVStore(preset("scavenger_plus"), n_shards=2) if sharded
+          else KVStore(preset("scavenger_plus")))
+    db.put(b"k", b"one")
+    assert db.read_modify_write(b"k", lambda v: None) is None
+    assert db.get(b"k") is None
+    assert db.compare_and_swap(b"k", None, b"two") is True
+    assert db.compare_and_swap(b"k", b"WRONG", b"three") is False
+    assert db.get(b"k") == b"two"
+    assert db.compare_and_swap(b"k", b"two", None) is True
+    assert db.get(b"k") is None
+    c = db.stats()["counters"]
+    assert c["cas_ops"] == 3 and c["cas_failures"] == 1
+
+
+# =====================================================================
+# Checkpoint backups under concurrent write storms
+# =====================================================================
+
+def test_checkpoint_restore_is_batch_consistent_under_storm():
+    """An online backup (restore) racing concurrent saves must return a
+    checkpoint whose every tensor chunk belongs to ONE step — the pinned
+    snapshot may not mix a step's meta with another step's chunks or
+    observe a half-applied save batch."""
+    from repro.checkpoint.store import CheckpointStore, CheckpointConfig
+    cs = CheckpointStore(cc=CheckpointConfig(keep_last=2),
+                         db=ShardedKVStore(preset("scavenger_plus"),
+                                           n_shards=4))
+
+    def tree_for(step):
+        # several multi-chunk-free tensors, all stamped with the step
+        return {"w%d" % i: np.full((64,), step + i, dtype=np.int64)
+                for i in range(6)}
+
+    cs.save(0, tree_for(0))
+    stop = threading.Event()
+    errs = []
+    barrier = threading.Barrier(2)
+
+    def saver():
+        try:
+            barrier.wait()
+            for step in range(1, 25):
+                cs.save(step, tree_for(step))
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+        finally:
+            stop.set()
+
+    def backup():
+        try:
+            barrier.wait()
+            while not stop.is_set():
+                step, tensors = cs.restore()
+                assert step is not None
+                for i in range(6):
+                    arr = tensors["w%d" % i]
+                    assert (arr == step + i).all(), \
+                        "chunks from a different step at step %d" % step
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    _run_all([threading.Thread(target=saver),
+              threading.Thread(target=backup)])
+    assert not errs, errs
+    cs.db.drain()
+    step, tensors = cs.restore()
+    assert step == 24
+    assert (tensors["w0"] == 24).all()
+    assert cs.db.stats()["mvcc"]["active_snapshots"] == 0
