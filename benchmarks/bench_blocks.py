@@ -1,0 +1,150 @@
+"""Block I/O suite: per-table Bloom filters + compressed blocks
+(store/blockio.py, store/filter.py).
+
+Part 1 — get-miss-heavy.  A point-lookup phase where most probes miss
+(the dedup/absent-check pattern filters exist for), run with the
+partitioned filters at 10 bits/key vs filters disabled
+(``bloom_bits_per_key=0``) on the same dataset and a deliberately small
+block cache.  Rows report **device reads per negative lookup**; the
+summary row checks the acceptance shape: filters cut them by >= 10x and
+the measured false-positive rate stays near theory.
+
+Part 2 — Zipfian point reads under compression.  The same skewed
+read-mostly workload over compressible values with ``block_compression``
+'lz4' vs 'none': every read must be byte-identical, and the physical
+footprint (index bytes + value file bytes) must shrink measurably.
+Rows also surface the codec's view: bytes-before/after ratios per tree
+level and for the value store, from ``stats()['blocks']``.
+
+Env (see common.py): REPRO_BENCH_FAST
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import fast
+from repro.core import KVStore, preset
+from repro.store.device import BlockDevice, IOClass
+
+
+# ---------------------------------------------------------------------------
+# Part 1: negative lookups
+# ---------------------------------------------------------------------------
+
+def _miss_run(bits: int, n_keys: int, n_probes: int) -> dict:
+    db = KVStore(preset("scavenger_plus", bloom_bits_per_key=bits,
+                        cache_bytes=16 << 10))
+    for i in range(n_keys):
+        db.put(b"key%07d" % (2 * i), bytes([i % 251]) * 100)
+    db.flush_all()
+    rng = np.random.default_rng(23)
+    # in-range misses: odd keys between the stored even ones, so the
+    # table key-range check cannot answer them — only the filter can.
+    probes = [b"key%07d" % (2 * int(rng.integers(n_keys)) + 1)
+              for _ in range(n_probes)]
+    db.get(b"key%07d" % 0)               # open readers / warm meta
+    r0 = db.device.stats.by_class[IOClass.USER_READ].ops
+    t0 = db.clock.now
+    for k in probes:
+        assert db.get(k) is None
+    bs = db.stats()["blocks"]
+    return {
+        "dev_reads_per_miss":
+            (db.device.stats.by_class[IOClass.USER_READ].ops - r0)
+            / n_probes,
+        "us_per_op": 1e6 * (db.clock.now - t0) / n_probes,
+        "probes": bs["filter_probes"],
+        "negatives": bs["filter_negatives"],
+        "fp": bs["filter_false_pos"] / max(1, bs["filter_probes"]),
+    }
+
+
+def _miss_rows() -> list:
+    n_keys = 800 if fast() else 3000
+    n_probes = 400 if fast() else 2000
+    filt = _miss_run(10, n_keys, n_probes)
+    none = _miss_run(0, n_keys, n_probes)
+    ratio = none["dev_reads_per_miss"] / max(1e-9,
+                                             filt["dev_reads_per_miss"])
+    ok = int((filt["dev_reads_per_miss"] == 0.0 or ratio >= 10.0)
+             and filt["negatives"] > 0 and filt["fp"] < 0.05)
+    return [
+        f"blocks/miss_bloom10,{filt['us_per_op']:.2f},"
+        f"dev_reads_per_miss={filt['dev_reads_per_miss']:.4f} "
+        f"probes={filt['probes']} negatives={filt['negatives']} "
+        f"fp={filt['fp']:.4f}",
+        f"blocks/miss_nobloom,{none['us_per_op']:.2f},"
+        f"dev_reads_per_miss={none['dev_reads_per_miss']:.4f}",
+        f"blocks/miss_summary,0.00,"
+        f"reduction_x={min(ratio, 9999.0):.1f} "
+        f"with={filt['dev_reads_per_miss']:.4f} "
+        f"without={none['dev_reads_per_miss']:.4f} ok={ok}",
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Part 2: Zipfian reads under compression
+# ---------------------------------------------------------------------------
+
+def _zipf_keys(rng, n_keys: int, n_ops: int):
+    ranks = np.minimum(rng.zipf(1.2, size=n_ops) - 1, n_keys - 1)
+    return [b"z%06d" % r for r in ranks]
+
+
+def _value(i: int) -> bytes:
+    # textual-ish, compressible payload with per-key variation
+    return (b"record-%06d|" % i + b"lorem ipsum dolor sit amet " * 40)[:900]
+
+
+def _zipf_run(codec: str, n_keys: int, n_ops: int) -> dict:
+    db = KVStore(preset("scavenger_plus", block_compression=codec),
+                 device=BlockDevice())
+    for i in range(n_keys):
+        db.put(b"z%06d" % i, _value(i))
+    db.flush_all()
+    rng = np.random.default_rng(31)
+    t0 = db.clock.now
+    reads = {}
+    for k in _zipf_keys(rng, n_keys, n_ops):
+        reads[k] = db.get(k)
+    su = db.space_usage()
+    bs = db.stats()["blocks"]
+    sample = {i: db.get(b"z%06d" % i) for i in range(0, n_keys, 7)}
+    return {
+        "sample": sample,
+        "us_per_op": 1e6 * (db.clock.now - t0) / n_ops,
+        "physical": su["index_bytes"] + su["value_file_bytes"],
+        "logical_v": su["value_total_bytes"],
+        "tree_ratio": bs["tree_ratio"],
+        "value_ratio": bs["value_ratio"],
+        "reads": reads,
+    }
+
+
+def _zipf_rows() -> list:
+    n_keys = 400 if fast() else 1500
+    n_ops = 600 if fast() else 3000
+    lz4 = _zipf_run("lz4", n_keys, n_ops)
+    raw = _zipf_run("none", n_keys, n_ops)
+    identical = int(lz4["reads"] == raw["reads"]
+                    and lz4["sample"] == raw["sample"]
+                    and all(v == _value(i)
+                            for i, v in lz4["sample"].items()))
+    shrink = 1.0 - lz4["physical"] / max(1, raw["physical"])
+    ok = int(identical and shrink > 0.05)
+    rows = []
+    for name, m in (("lz4", lz4), ("none", raw)):
+        rows.append(
+            f"blocks/zipf_{name},{m['us_per_op']:.2f},"
+            f"physical={m['physical']} logical_values={m['logical_v']} "
+            f"tree_ratio={m['tree_ratio']:.3f} "
+            f"value_ratio={m['value_ratio']:.3f}")
+    rows.append(
+        f"blocks/zipf_summary,0.00,space_saved={shrink:.3f} "
+        f"identical={identical} ok={ok}")
+    return rows
+
+
+def run() -> list:
+    return _miss_rows() + _zipf_rows()

@@ -27,6 +27,10 @@ Suites:
   cache          shared read cache: static split vs shared quotas on a
                  skewed two-tenant read workload (hit ratio + device
                  reads/op), S-ADP/S-CACHE ablation, read-cost toggle
+  blocks         block I/O: Bloom filters on a get-miss-heavy phase
+                 (device reads per negative lookup, >=10x gate) and
+                 Zipfian reads under lz4 vs none (space saved,
+                 byte-identical reads)
   concurrent     concurrent front-end: N client threads through
                  write_batch/multi_get — aggregate throughput (sim time),
                  per-call wall p50/p95/p99, 4-vs-1-thread speedup gate
@@ -48,10 +52,10 @@ def main() -> None:
     for a in sys.argv[1:]:
         if a.startswith("--json="):
             json_path = a.split("=", 1)[1]
-    from . import (bench_cache, bench_concurrent, bench_features,
-                   bench_gc_breakdown, bench_micro, bench_placement,
-                   bench_sharded, bench_space_sources, bench_space_time,
-                   bench_ycsb)
+    from . import (bench_blocks, bench_cache, bench_concurrent,
+                   bench_features, bench_gc_breakdown, bench_micro,
+                   bench_placement, bench_sharded, bench_space_sources,
+                   bench_space_time, bench_ycsb)
     suites = {
         "space_time": bench_space_time.run,
         "gc_breakdown": bench_gc_breakdown.run,
@@ -63,6 +67,7 @@ def main() -> None:
         "rebalance": bench_sharded.run_rebalance,
         "placement": bench_placement.run,
         "cache": bench_cache.run,
+        "blocks": bench_blocks.run,
         "concurrent": bench_concurrent.run,
     }
     try:

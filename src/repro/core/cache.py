@@ -46,11 +46,18 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from typing import Dict, List, Optional, Set, Tuple
+from contextlib import contextmanager
+from typing import Dict, Iterator, List, Optional, Set, Tuple
 
 from .placement import N_BUCKETS, bucket_of
 
 CacheKey = Tuple[int, int]          # (fid, offset)
+
+#: resident entries are (value, charge): the cache holds *decoded* blocks
+#: but charges the *stored* (compressed) size against the byte budget —
+#: DRAM spent mirrors device bytes saved, the same space axis the quota
+#: retune already optimizes.
+CacheEnt = Tuple[bytes, int]
 
 #: Cap on per-shard pending re-admission marks (ghost-hit keys awaiting
 #: their fill `put`); a mark is consumed by the very next fill in the
@@ -84,12 +91,18 @@ class SharedReadCache:
         base, rem = divmod(capacity_bytes, n_shards)
         self.quotas: List[int] = [base + rem] + [base] * (n_shards - 1)
         n = n_shards
-        self._low: List["OrderedDict[CacheKey, bytes]"] = \
+        self._low: List["OrderedDict[CacheKey, CacheEnt]"] = \
             [OrderedDict() for _ in range(n)]
-        self._high: List["OrderedDict[CacheKey, bytes]"] = \
+        self._high: List["OrderedDict[CacheKey, CacheEnt]"] = \
             [OrderedDict() for _ in range(n)]
         self._low_bytes = [0] * n
         self._high_bytes = [0] * n
+        # scan-window depth per shard: while >0, lookups neither promote
+        # nor touch the ghost, and fills are bypassed entirely — one long
+        # merged scan cannot evict the working set or pollute the ghost
+        # with single-touch fingerprints.
+        self._scan_depth = [0] * n
+        self.scan_bypass = [0] * n
         self._ghost: List["OrderedDict[CacheKey, int]"] = \
             [OrderedDict() for _ in range(n)]
         self._ghost_bytes = [0] * n
@@ -139,15 +152,19 @@ class SharedReadCache:
             if self.adaptive and self._lookups_since_retune >= \
                     self.retune_interval:
                 self.retune_quotas()
+            scanning = self._scan_depth[sid] > 0
             for q in (self._high[sid], self._low[sid]):
                 v = q.get(key)
                 if v is not None:
-                    q.move_to_end(key)
+                    # Scan hits count, but don't refresh recency — a scan
+                    # touching a block once says nothing about reuse.
+                    if not scanning:
+                        q.move_to_end(key)
                     self.hits[sid] += 1
                     self._w_hits[sid] += 1
-                    return v
+                    return v[0]
             self.misses[sid] += 1
-            if self.adaptive:
+            if self.adaptive and not scanning:
                 sz = self._ghost[sid].pop(key, None)
                 if sz is not None:
                     # A ghost hit: the device read about to happen is one a
@@ -161,9 +178,17 @@ class SharedReadCache:
             return None
 
     def put(self, sid: int, key: CacheKey, value: bytes,
-            high_priority: bool = False) -> None:
+            high_priority: bool = False,
+            charge: Optional[int] = None) -> None:
+        """Insert a block; ``charge`` (default ``len(value)``) is the byte
+        cost counted against the quota — the stored/compressed size when
+        the resident bytes are a decoded block."""
         with self._mu:
-            size = len(value)
+            if self._scan_depth[sid] > 0:
+                # Scan-window fill: skip both residency and the ghost.
+                self.scan_bypass[sid] += 1
+                return
+            size = len(value) if charge is None else charge
             quota = self.quotas[sid]
             readmit = key in self._readmit[sid]
             if readmit:
@@ -192,10 +217,10 @@ class SharedReadCache:
                     self._ghost_put(sid, key, size)
                     return
             if high_priority:
-                self._high[sid][key] = value
+                self._high[sid][key] = (value, size)
                 self._high_bytes[sid] += size
             else:
-                self._low[sid][key] = value
+                self._low[sid][key] = (value, size)
                 self._low_bytes[sid] += size
             self._fid_keys.setdefault(key[0], set()).add((sid, key))
             self._enforce_quota(sid)
@@ -208,19 +233,19 @@ class SharedReadCache:
         high_cap = int(quota * self.high_ratio)
         high = self._high[sid]
         while self._high_bytes[sid] > high_cap and high:
-            k, v = high.popitem(last=False)
-            self._high_bytes[sid] -= len(v)
+            k, (_, sz) = high.popitem(last=False)
+            self._high_bytes[sid] -= sz
             self._drop_fid_key(sid, k)
             if self.adaptive:
-                self._ghost_put(sid, k, len(v))
+                self._ghost_put(sid, k, sz)
         low_cap = quota - self._high_bytes[sid]
         low = self._low[sid]
         while self._low_bytes[sid] > low_cap and low:
-            k, v = low.popitem(last=False)
-            self._low_bytes[sid] -= len(v)
+            k, (_, sz) = low.popitem(last=False)
+            self._low_bytes[sid] -= sz
             self._drop_fid_key(sid, k)
             if self.adaptive:
-                self._ghost_put(sid, k, len(v))
+                self._ghost_put(sid, k, sz)
 
     # ==================================================================
     # Eviction
@@ -230,11 +255,11 @@ class SharedReadCache:
         with self._mu:
             v = self._low[sid].pop(key, None)
             if v is not None:
-                self._low_bytes[sid] -= len(v)
+                self._low_bytes[sid] -= v[1]
                 self._drop_fid_key(sid, key)
             v = self._high[sid].pop(key, None)
             if v is not None:
-                self._high_bytes[sid] -= len(v)
+                self._high_bytes[sid] -= v[1]
                 self._drop_fid_key(sid, key)
 
     def evict_file(self, sid: int, fid: int) -> None:
@@ -248,11 +273,11 @@ class SharedReadCache:
             for owner, key in self._fid_keys.pop(fid, ()):
                 v = self._low[owner].pop(key, None)
                 if v is not None:
-                    self._low_bytes[owner] -= len(v)
+                    self._low_bytes[owner] -= v[1]
                     continue
                 v = self._high[owner].pop(key, None)
                 if v is not None:
-                    self._high_bytes[owner] -= len(v)
+                    self._high_bytes[owner] -= v[1]
             for owner, key in self._ghost_fids.pop(fid, ()):
                 sz = self._ghost[owner].pop(key, None)
                 if sz is not None:
@@ -272,6 +297,18 @@ class SharedReadCache:
             s.discard((sid, key))
             if not s:
                 del self._fid_keys[key[0]]
+
+    # ==================================================================
+    # Scan windows
+    # ==================================================================
+
+    def begin_scan(self, sid: int) -> None:
+        with self._mu:
+            self._scan_depth[sid] += 1
+
+    def end_scan(self, sid: int) -> None:
+        with self._mu:
+            self._scan_depth[sid] = max(0, self._scan_depth[sid] - 1)
 
     # ==================================================================
     # Ghost cache
@@ -420,6 +457,7 @@ class SharedReadCache:
             "ghost_hits": self.ghost_hits[sid],
             "ghost_hit_ratio": (self.ghost_hits[sid] / self.misses[sid]
                                 if self.misses[sid] else 0.0),
+            "scan_bypass": self.scan_bypass[sid],
             "value_reads": reads,
             "value_reads_absorbed": sum(self._absorbed[sid]),
             # size-class (log2 bucket) → point reads of values that size
@@ -443,6 +481,7 @@ class SharedReadCache:
                 "misses": misses,
                 "hit_ratio": hits / tot if tot else 0.0,
                 "ghost_hits": sum(self.ghost_hits),
+                "scan_bypass": sum(self.scan_bypass),
                 "per_shard": [self._shard_stats_locked(s)
                               for s in range(self.n_shards)],
             }
@@ -464,8 +503,20 @@ class ShardCacheHandle:
         return self.core.get(self.sid, key)
 
     def put(self, key: CacheKey, value: bytes,
-            high_priority: bool = False) -> None:
-        self.core.put(self.sid, key, value, high_priority=high_priority)
+            high_priority: bool = False,
+            charge: Optional[int] = None) -> None:
+        self.core.put(self.sid, key, value, high_priority=high_priority,
+                      charge=charge)
+
+    @contextmanager
+    def scan_window(self) -> Iterator[None]:
+        """Tag the enclosed reads as one scan: cache hits still count but
+        nothing is promoted, admitted, or ghost-fingerprinted."""
+        self.core.begin_scan(self.sid)
+        try:
+            yield
+        finally:
+            self.core.end_scan(self.sid)
 
     def evict_key(self, key: CacheKey) -> None:
         self.core.evict_key(self.sid, key)

@@ -183,7 +183,10 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
             outputs.append((fid, props))
         writer = KTableWriter(db.device, opts.block_bytes,
                               dtable=(opts.ksst_format == "dtable"),
-                              bits_per_key=opts.bits_per_key)
+                              bits_per_key=opts.bloom_bits(),
+                              codec=opts.block_compression,
+                              min_ratio=opts.compression_min_ratio,
+                              level=plan.output_level)
 
     _roll()
     assert writer is not None
@@ -252,7 +255,8 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
                 meta.live_value_bytes = max(
                     0, meta.live_value_bytes - len(v))
                 dropped_refs.append((vfid, 0))  # marks ref move; bytes done
-                entry = (ukey, seq, vtype, encode_ka(blob_fid, noff, nlen))
+                entry = (ukey, seq, vtype,
+                         encode_ka(blob_fid, noff, nlen, raw=len(v)))
         if resep and vtype == VT_VALUE and \
                 db.placement.want_separate_on_compaction(ukey, len(payload)):
             if sep_writer is None or \
@@ -267,7 +271,8 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
             # inline copy in a deeper level is still a free duplicate
             # (its bytes vanish with the input file, no garbage exposed).
             if opts.index_kind == "ka":
-                entry = (ukey, seq, VT_INDEX_KA, encode_ka(sep_fid, off, ln))
+                entry = (ukey, seq, VT_INDEX_KA,
+                         encode_ka(sep_fid, off, ln, raw=len(payload)))
             else:
                 entry = (ukey, seq, VT_INDEX_KF,
                          encode_kf(sep_fid, len(payload)))

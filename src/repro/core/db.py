@@ -16,8 +16,9 @@ import heapq as _heapq
 import threading
 from bisect import bisect_left
 from contextlib import contextmanager
-from typing import Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
 
+from ..store.blockio import BlockCorruptionError
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
 from ..store.format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF, VT_VALUE,
                             decode_ka, decode_kf, encode_ka, encode_kf,
@@ -109,6 +110,14 @@ class KVStore:
         # Read-aware placement: the engine drains the cache's
         # per-size-class read-heat counters at each retune.
         self.placement.read_heat_source = self.cache
+        # Physical-encoding-aware placement: measured compression ratios
+        # and the vSST wasted-probe rate feed the cost model's space/read
+        # terms (the device's counters — shared across a sharded store).
+        self.placement.blockio_source = self.device.block_stats
+        # Files whose blocks failed checksum verification: dropped from
+        # the reader/cache pool, never probed again.  The file's bytes are
+        # kept on the device for forensics (unlike drop_table).
+        self.quarantined: Set[int] = set()
         self.shard_tag = shard_tag
         # MVCC: registered snapshot bounds for THIS shard.  The memtable's
         # retain hook keeps a shadowed version alive exactly while a
@@ -363,9 +372,16 @@ class KVStore:
         use_idx_probe = cls == IOClass.GC_LOOKUP
         for f in self.versions.levels[0]:           # newest first
             if f.smallest <= ukey <= f.largest:
-                r = self.reader(f.fid, cls)
-                e = (r.get_index_entry(ukey, cls) if use_idx_probe
-                     else r.get(ukey, cls, max_seq))
+                try:
+                    r = self.reader(f.fid, cls)
+                    e = (r.get_index_entry(ukey, cls) if use_idx_probe
+                         else r.get(ukey, cls, max_seq))
+                except BlockCorruptionError:
+                    # kSSTs have no redundant copy; skipping the file
+                    # could surface a STALE older version from a deeper
+                    # level — fail loudly rather than serve wrong data.
+                    self._quarantine(f.fid)
+                    raise
                 if e is not None:
                     return e
         for level in range(1, self.versions.num_levels):
@@ -387,9 +403,13 @@ class KVStore:
                 j -= 1
             best: Optional[Entry] = None
             for cand in cands:
-                r = self.reader(cand.fid, cls)
-                e = (r.get_index_entry(ukey, cls) if use_idx_probe
-                     else r.get(ukey, cls, max_seq))
+                try:
+                    r = self.reader(cand.fid, cls)
+                    e = (r.get_index_entry(ukey, cls) if use_idx_probe
+                         else r.get(ukey, cls, max_seq))
+                except BlockCorruptionError:
+                    self._quarantine(cand.fid)
+                    raise
                 if e is not None and (best is None or e[1] > best[1]):
                     best = e
             if best is not None:
@@ -539,25 +559,37 @@ class KVStore:
                 # value logs are read straight off the device, uncached
                 self.cache.note_value_read(len(val), absorbed=False)
             return val
-        # KF: probe the lookup-group candidates (primary first).
+        # KF: probe the lookup-group candidates (primary first).  A
+        # candidate whose block fails its checksum is quarantined and the
+        # NEXT candidate — GC's not-yet-dropped rewrite of the same group,
+        # when one exists — serves as the redundant copy; only when no
+        # candidate can serve does the corruption surface to the caller.
         fid, _ = decode_kf(payload)
+        corrupt: Optional[BlockCorruptionError] = None
         for cand in self.versions.lookup_candidates(fid):
             meta = self.versions.vssts.get(cand)
             if meta is None or not self.device.exists(cand):
                 continue
-            if meta.fmt == "rtable":
-                # dense index partitions are cached, value bytes are a
-                # direct (lazy) device read — never absorbed
-                rr, h0 = self.r_reader(cand), None
-            else:
-                rr, h0 = self.vb_reader(cand), self.cache.hits
-            val = rr.get(e[0], cls)
+            rr = (self.r_reader(cand) if meta.fmt == "rtable"
+                  else self.vb_reader(cand))
+            # Absorbed = the cache satisfied the hop: no new USER_READ
+            # device op during the probe (uniform across RTable record
+            # cache and VBTable block cache).
+            ops0 = self.device.stats.by_class[cls].ops
+            try:
+                val = rr.get(e[0], cls)
+            except BlockCorruptionError as exc:
+                self._quarantine(cand)
+                corrupt = exc
+                continue
             if val is not None:
                 if cls == IOClass.USER_READ:
                     self.cache.note_value_read(
                         len(val),
-                        absorbed=h0 is not None and self.cache.hits > h0)
+                        absorbed=self.device.stats.by_class[cls].ops == ops0)
                 return val
+        if corrupt is not None:
+            raise corrupt
         return None
 
     def entry_streams(self, start: bytes,
@@ -615,21 +647,25 @@ class KVStore:
             self.stats_counters["scans"] += 1
             out: List[Tuple[bytes, bytes]] = []
             prev: Optional[bytes] = None
-            for e in _heapq.merge(*self.entry_streams(
-                                      start, IOClass.USER_READ,
-                                      self._snap_bound(snapshot)),
-                                  key=lambda e: (e[0], -e[1])):
-                if e[0] == prev:
-                    continue
-                prev = e[0]
-                if accept is not None and not accept(e[0]):
-                    continue
-                val = self._resolve_value(e, IOClass.USER_READ)
-                if val is None:
-                    continue
-                out.append((e[0], val))
-                if len(out) >= count:
-                    break
+            # Scan-window admission: blocks touched only by this sweep
+            # neither evict the point-read working set nor pollute the
+            # ghost (hits still count, so hot overlap still scores).
+            with self.cache.scan_window():
+                for e in _heapq.merge(*self.entry_streams(
+                                          start, IOClass.USER_READ,
+                                          self._snap_bound(snapshot)),
+                                      key=lambda e: (e[0], -e[1])):
+                    if e[0] == prev:
+                        continue
+                    prev = e[0]
+                    if accept is not None and not accept(e[0]):
+                        continue
+                    val = self._resolve_value(e, IOClass.USER_READ)
+                    if val is None:
+                        continue
+                    out.append((e[0], val))
+                    if len(out) >= count:
+                        break
             return out
 
     def _level_stream(self, files: List[FileMeta], start: bytes,
@@ -675,6 +711,19 @@ class KVStore:
         self.cache.evict_file(fid)
         self.device.delete(fid)
 
+    def _quarantine(self, fid: int) -> None:
+        """A block of ``fid`` failed its checksum: drop the reader and
+        every cached block (either may hold bytes decoded before the
+        corruption landed), and count the file once.  The device bytes
+        stay for forensics; intact blocks of the file remain readable
+        through a fresh reader, so unaffected keys keep working."""
+        if fid in self.quarantined:
+            return
+        self.quarantined.add(fid)
+        self.device.block_stats.quarantined_files += 1
+        self._readers.pop(fid, None)
+        self.cache.evict_file(fid)
+
     def warm_open(self, fid: int, kind: str) -> None:
         """Open a just-written table for free — its footer/index pages are
         still in page cache (RocksDB table-cache + OS cache behaviour)."""
@@ -691,10 +740,15 @@ class KVStore:
                 self._readers[fid] = LogTableReader(self.device, fid)
 
     def new_vsst_writer(self):
-        if self.opts.vsst_format == "rtable":
-            return RTableWriter(self.device)
-        if self.opts.vsst_format == "btable":
-            return VBTableWriter(self.device)
+        opts = self.opts
+        if opts.vsst_format == "rtable":
+            return RTableWriter(self.device, codec=opts.block_compression,
+                                min_ratio=opts.compression_min_ratio,
+                                bits_per_key=opts.bloom_bits())
+        if opts.vsst_format == "btable":
+            return VBTableWriter(self.device, codec=opts.block_compression,
+                                 min_ratio=opts.compression_min_ratio,
+                                 bits_per_key=opts.bloom_bits())
         return LogTableWriter(self.device)
 
     def finish_vsst(self, writer, cls: IOClass, fid: Optional[int] = None,
@@ -805,7 +859,9 @@ class KVStore:
         ksst_writers: List[Tuple[int, dict]] = []
         kw = KTableWriter(self.device, opts.block_bytes,
                           dtable=(opts.ksst_format == "dtable"),
-                          bits_per_key=opts.bits_per_key)
+                          bits_per_key=opts.bloom_bits(),
+                          codec=opts.block_compression,
+                          min_ratio=opts.compression_min_ratio, level=0)
         vsst_metas: List[VSSTMeta] = []
         vws: Dict[bool, Tuple[Optional[int], Optional[object]]] = {
             True: (None, None), False: (None, None)}
@@ -841,7 +897,10 @@ class KVStore:
                 ksst_writers.append((fid, props))
                 kw = KTableWriter(self.device, opts.block_bytes,
                                   dtable=(opts.ksst_format == "dtable"),
-                                  bits_per_key=opts.bits_per_key)
+                                  bits_per_key=opts.bloom_bits(),
+                                  codec=opts.block_compression,
+                                  min_ratio=opts.compression_min_ratio,
+                                  level=0)
             # Snapshot-retained history versions (non-newest) are written
             # out verbatim — they are doomed duplicates that compaction
             # drops once their snapshots release, so separating them
@@ -854,7 +913,7 @@ class KVStore:
                 flushed_bytes += len(payload)
                 if opts.index_kind == "ka":
                     entry = (ukey, seq, VT_INDEX_KA,
-                             encode_ka(vfid, off, ln))
+                             encode_ka(vfid, off, ln, raw=len(payload)))
                 else:
                     entry = (ukey, seq, VT_INDEX_KF,
                              encode_kf(vfid, len(payload)))
@@ -951,8 +1010,12 @@ class KVStore:
             "total_bytes": self.device.total_bytes(),
             "index_bytes": sum(lvl),
             "index_level_bytes": lvl,
+            # Logical (pre-codec) value bytes vs physical file footprint:
+            # with compression on, value_file_bytes < value_total_bytes.
             "value_total_bytes": tot_v,
             "value_live_bytes": live_v,
+            "value_file_bytes": sum(m.file_size
+                                    for m in self.versions.vssts.values()),
             "s_index": self.versions.s_index(),
             "exposed_ratio": self.versions.exposed_ratio(),
             "global_garbage_ratio": self.versions.global_garbage_ratio(),
@@ -993,4 +1056,8 @@ class KVStore:
                           "hit_rate": (self.dropcache.hits /
                                        max(1, self.dropcache.queries))},
             "placement": self.placement.stats(),
+            # Block I/O subsystem: codec bytes before/after per level,
+            # filter probe outcomes, corruption/quarantine counts (the
+            # device's counters — shared across a sharded store).
+            "blocks": self.device.block_stats.snapshot(),
         }

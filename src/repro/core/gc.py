@@ -115,7 +115,7 @@ def run_gc_titan(db, victim: VSSTMeta) -> Callable[[], None]:
             writer = LogTableWriter(db.device)
         off, ln = writer.add(ukey, value)
         writeback.append((ukey, old_ka, VT_INDEX_KA,
-                          encode_ka(wfid, off, ln)))
+                          encode_ka(wfid, off, ln, raw=len(value))))
     _seal()
 
     def effects(elapsed: float = 0.0) -> None:

@@ -108,6 +108,19 @@ class Options:
     # Cache lookups between quota re-tunes.
     cache_retune_interval: int = 2048
 
+    # --- block I/O: per-table filters + compressed checksummed blocks ----
+    # Bits/key of the partitioned per-table Bloom filters (kSST sections
+    # AND vSST key sets).  None inherits ``bits_per_key``; 0 disables
+    # filter blocks entirely.
+    bloom_bits_per_key: Optional[int] = None
+    # Block codec: 'none' (checksummed raw) or 'lz4' (simulated-cost fast
+    # compressor; per-size-class ratios from the value model).  All v2
+    # blocks carry a CRC32 either way.
+    block_compression: str = "none"
+    # Store a block compressed only when stored/raw < this ratio —
+    # incompressible blocks stay raw and skip the decompress CPU on read.
+    compression_min_ratio: float = 0.9
+
     # --- sharded front-end: slot routing + online rebalancing ------------
     num_slots: int = 256              # fixed routing slots (keys hash here)
     rebalance: bool = False           # enable the online slot balancer
@@ -138,9 +151,20 @@ class Options:
         assert self.cache_ghost_ratio > 0.0
         assert 0.0 <= self.cache_quota_floor <= self.cache_quota_ceiling <= 1.0
         assert self.cache_retune_interval >= 1
+        assert self.block_compression in ("none", "lz4")
+        assert 0.0 < self.compression_min_ratio <= 1.0
+        if self.bloom_bits_per_key is None:
+            self.bloom_bits_per_key = self.bits_per_key
+        assert self.bloom_bits_per_key >= 0
         if self.index_kind == "ka":
             assert self.vsst_format == "log", "KA addressing implies log vSSTs"
         return self
+
+    def bloom_bits(self) -> int:
+        """Effective filter bits/key (handles un-validated Options where
+        ``bloom_bits_per_key`` is still the None sentinel)."""
+        return (self.bits_per_key if self.bloom_bits_per_key is None
+                else self.bloom_bits_per_key)
 
 
 def preset(name: str, **over) -> Options:
@@ -165,7 +189,7 @@ def preset(name: str, **over) -> Options:
             index_kind="kf", vsst_format="rtable", ksst_format="dtable",
             compensated_size=True, dropcache=True, adaptive_readahead=True,
             dynamic_scheduler=True, adaptive_placement=True,
-            shared_cache=True),
+            shared_cache=True, block_compression="lz4"),
         # -- ablation ladder (paper names) ---------------------------------
         "TDB": dict(index_kind="kf", vsst_format="btable", dca=False),
         "TDB-C": dict(index_kind="kf", vsst_format="btable",

@@ -200,6 +200,12 @@ class PlacementEngine:
         # measured per-size-class point-read rate and how much of it the
         # block cache absorbs — the read-cost term's two inputs.
         self.read_heat_source = None
+        # Block-subsystem counters (the device's BlockCodecStats, set by
+        # KVStore): measured compression ratios re-scale the space terms —
+        # a compressed-inline byte occupies less tree than a raw one — and
+        # the vSST wasted-probe rate prices negative-lookup hops, which
+        # per-table filters drive to ~0.
+        self.blockio_source = None
         self.threshold = opts.sep_threshold
         self.counters: Dict[str, int] = {
             "inline_records": 0, "separated_records": 0,
@@ -356,6 +362,18 @@ class PlacementEngine:
         blob_res = rg / (1.0 - rg)
         sw = opts.placement_space_weight
         rw = opts.placement_read_weight
+        # Physical-encoding terms from the block subsystem: measured
+        # stored/raw ratios shrink the *resident* byte terms (compression
+        # attacks S_index bloat from the physical side), and the measured
+        # wasted-probe rate prices the extra hops negative vSST lookups
+        # cost — per-table filters collapse it toward zero.
+        bio = self.blockio_source
+        tree_comp = val_comp = 1.0
+        wasted = 0.0
+        if bio is not None:
+            tree_comp = min(max(bio.ratio("tree"), 0.2), 1.0)
+            val_comp = min(max(bio.ratio("value"), 0.2), 1.0)
+            wasted = bio.wasted_probe_rate()
 
         inline_cost = [0.0] * N_BUCKETS
         sep_cost = [0.0] * N_BUCKETS
@@ -366,12 +384,13 @@ class PlacementEngine:
             s = self.sizes.bytes[b] / n
             u = min(self.churn.counts[b] / n, 2.0)
             inline_cost[b] = n * ((s + key_b) * w_amp
-                                  + sw * (s + key_b) * tree_over)
+                                  + sw * (s + key_b) * tree_over * tree_comp)
             sep_cost[b] = n * ((entry + key_b) * w_amp
                                + (s + key_b + hdr) * (1.0 + u * g_amp)
-                               + sw * ((entry + key_b) * tree_over
+                               + sw * ((entry + key_b) * tree_over * tree_comp
                                        + key_b + hdr
-                                       + s * min(u, 2.0) * (blob_res + rg)))
+                                       + s * val_comp * min(u, 2.0)
+                                       * (blob_res + rg)))
             # Read-cost term: every measured point read of this size
             # class that the cache did NOT absorb pays a second device
             # hop when the value is separated — an inline value rides
@@ -383,7 +402,7 @@ class PlacementEngine:
                                        / self.reads.counts[b]))
                 reads_per_rec = self.reads.counts[b] / n
                 sep_cost[b] += n * rw * reads_per_rec * miss \
-                    * (s + hdr + READ_HOP_BYTES)
+                    * (s + hdr + READ_HOP_BYTES * (1.0 + wasted))
 
         # cost(t_i) = inline everything below bucket i, separate the rest;
         # one suffix-sum pass evaluates every boundary.
@@ -420,5 +439,12 @@ class PlacementEngine:
             "reads_observed": int(self.reads.total),
             "reads_absorbed": int(self.absorbed.total),
             "read_weight": self.opts.placement_read_weight,
+            "tree_compression": (round(self.blockio_source.ratio("tree"), 4)
+                                 if self.blockio_source is not None else 1.0),
+            "value_compression": (round(self.blockio_source.ratio("value"), 4)
+                                  if self.blockio_source is not None else 1.0),
+            "wasted_probe_rate": (
+                round(self.blockio_source.wasted_probe_rate(), 4)
+                if self.blockio_source is not None else 0.0),
             **self.counters,
         }

@@ -732,6 +732,7 @@ class ShardedKVStore:
             "index_level_bytes": lvl,
             "value_total_bytes": tot_v,
             "value_live_bytes": live_v,
+            "value_file_bytes": sum(p["value_file_bytes"] for p in per),
             "s_index": _s_index(lvl),
             "exposed_ratio": (tot_v - live_v) / live_v if live_v > 0 else 0.0,
             "global_garbage_ratio": (tot_v - live_v) / tot_v
@@ -791,6 +792,9 @@ class ShardedKVStore:
             "mvcc": {"csn": self.commitlog.csn,
                      "active_snapshots": self._open_snapshots},
             "placement": placement,
+            # Block I/O: one device-wide counter set (codec ratios, filter
+            # probes, corruption) — shards share the device's instance.
+            "blocks": self.device.block_stats.snapshot(),
             "per_shard_counters": [dict(s.stats_counters)
                                    for s in self.shards],
         }

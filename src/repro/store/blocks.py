@@ -12,38 +12,21 @@ single-tenant constructor, now a view over a private one-shard core.
 
 from __future__ import annotations
 
-import hashlib
-import struct
-from typing import List, Tuple
+from typing import Tuple
+
+# varint coding lives in blockio (stdlib-only, shared with envelopes and
+# filters); the Bloom filters moved to repro.store.filter.  Both are
+# re-exported here for the historical import surface.
+from .blockio import decode_varint, encode_varint
+from .filter import BloomFilter
+
+__all__ = ["encode_varint", "decode_varint", "encode_record",
+           "decode_record", "BloomFilter", "BlockCache"]
 
 
 # --------------------------------------------------------------------------
-# varint + record coding
+# record coding
 # --------------------------------------------------------------------------
-
-def encode_varint(n: int) -> bytes:
-    out = bytearray()
-    while True:
-        b = n & 0x7F
-        n >>= 7
-        if n:
-            out.append(b | 0x80)
-        else:
-            out.append(b)
-            return bytes(out)
-
-
-def decode_varint(buf: bytes, pos: int) -> Tuple[int, int]:
-    shift = 0
-    result = 0
-    while True:
-        b = buf[pos]
-        pos += 1
-        result |= (b & 0x7F) << shift
-        if not b & 0x80:
-            return result, pos
-        shift += 7
-
 
 def encode_record(key: bytes, value: bytes) -> bytes:
     return encode_varint(len(key)) + key + encode_varint(len(value)) + value
@@ -57,54 +40,6 @@ def decode_record(buf: bytes, pos: int) -> Tuple[bytes, bytes, int]:
     value = buf[pos:pos + vlen]
     pos += vlen
     return key, value, pos
-
-
-# --------------------------------------------------------------------------
-# Bloom filter (10 bits/key default, double hashing over blake2b)
-# --------------------------------------------------------------------------
-
-class BloomFilter:
-    def __init__(self, bits: bytearray, k: int) -> None:
-        self.bits = bits
-        self.k = k
-
-    @staticmethod
-    def _hashes(key: bytes) -> Tuple[int, int]:
-        d = hashlib.blake2b(key, digest_size=16).digest()
-        return (int.from_bytes(d[:8], "little"),
-                int.from_bytes(d[8:], "little") | 1)
-
-    @classmethod
-    def build(cls, keys: List[bytes], bits_per_key: int = 10) -> "BloomFilter":
-        n = max(64, len(keys) * bits_per_key)
-        k = max(1, min(8, int(round(bits_per_key * 0.69))))
-        bits = bytearray((n + 7) // 8)
-        m = len(bits) * 8
-        for key in keys:
-            h1, h2 = cls._hashes(key)
-            for i in range(k):
-                b = (h1 + i * h2) % m
-                bits[b >> 3] |= 1 << (b & 7)
-        return cls(bits, k)
-
-    def may_contain(self, key: bytes) -> bool:
-        m = len(self.bits) * 8
-        if m == 0:
-            return True
-        h1, h2 = self._hashes(key)
-        for i in range(self.k):
-            b = (h1 + i * h2) % m
-            if not self.bits[b >> 3] & (1 << (b & 7)):
-                return False
-        return True
-
-    def encode(self) -> bytes:
-        return struct.pack("<B", self.k) + bytes(self.bits)
-
-    @classmethod
-    def decode(cls, data: bytes) -> "BloomFilter":
-        (k,) = struct.unpack_from("<B", data, 0)
-        return cls(bytearray(data[1:]), k)
 
 
 # --------------------------------------------------------------------------

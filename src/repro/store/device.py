@@ -24,6 +24,8 @@ from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
 
+from .blockio import BlockCodecStats
+
 
 class IOClass(enum.Enum):
     """Classification of an I/O request, mirroring the paper's breakdown."""
@@ -199,6 +201,10 @@ class BlockDevice:
         self.clock = clock or Clock()
         self.cost = cost or CostModel()
         self.stats = IOStats()
+        # Block-subsystem counters (codec bytes, filter probes, corruption)
+        # live on the device like IOStats: every writer/reader already holds
+        # the device, and a sharded store shares one set of counters.
+        self.block_stats = BlockCodecStats()
         self._files: Dict[int, bytearray] = {}
         self._next_id = 1
         self.gc_read_limiter: Optional[RateLimiter] = None

@@ -40,8 +40,19 @@ def unpack_ikey(ikey: bytes) -> Tuple[bytes, int, int]:
     return ikey[:-8], MAX_SEQ - (tail >> 8), tail & 0xFF
 
 
-def encode_ka(vsst: int, offset: int, size: int) -> bytes:
-    return encode_varint(vsst) + encode_varint(offset) + encode_varint(size)
+def encode_ka(vsst: int, offset: int, size: int,
+              raw: int = None) -> bytes:
+    """KA address payload: (vsst, offset, size) + optional logical size.
+
+    ``size`` is the *stored* span (envelope bytes under compression); when
+    the logical (uncompressed) value size differs, it rides along as a 4th
+    varint so heat/placement accounting stays in logical bytes while reads
+    still know exactly how many device bytes to fetch.
+    """
+    out = encode_varint(vsst) + encode_varint(offset) + encode_varint(size)
+    if raw is not None and raw != size:
+        out += encode_varint(raw)
+    return out
 
 
 def decode_ka(payload: bytes) -> Tuple[int, int, int]:
@@ -49,6 +60,16 @@ def decode_ka(payload: bytes) -> Tuple[int, int, int]:
     off, p = decode_varint(payload, p)
     size, p = decode_varint(payload, p)
     return vsst, off, size
+
+
+def ka_logical_size(payload: bytes) -> int:
+    """Logical value size of a KA payload (stored size when they coincide)."""
+    _, p = decode_varint(payload, 0)
+    _, p = decode_varint(payload, p)
+    size, p = decode_varint(payload, p)
+    if p < len(payload):
+        size, p = decode_varint(payload, p)
+    return size
 
 
 def encode_kf(vsst: int, size: int) -> bytes:
@@ -63,11 +84,15 @@ def decode_kf(payload: bytes) -> Tuple[int, int]:
 
 def entry_value_size(vtype: int, payload: bytes) -> int:
     """Referenced (or inline) value bytes of an entry — the quantity the
-    compensated-size compaction strategy sums per kSST (paper III-C)."""
+    compensated-size compaction strategy sums per kSST (paper III-C).
+
+    Always *logical* (uncompressed) bytes, so compression does not skew the
+    heat sketch or the placement histograms; ``space_usage()`` reports the
+    physical side separately."""
     if vtype == VT_VALUE:
         return len(payload)
     if vtype == VT_INDEX_KA:
-        return decode_ka(payload)[2]
+        return ka_logical_size(payload)
     if vtype == VT_INDEX_KF:
         return decode_kf(payload)[1]
     return 0

@@ -3,8 +3,23 @@ RTable (vSST, dense per-record index) and LogTable (Titan/BlobDB blob file).
 
 All tables share a footer layout and msgpack-encoded metadata sections::
 
-    [sections ...][props][footer: <6Q B magic> = props_off, props_len,
-                                   idx_off, idx_len, aux_off, aux_len, type]
+    [sections ...][props][footer: <6Q B B magic> = props_off, props_len,
+                          idx_off, idx_len, aux_off, aux_len, type, version]
+
+Format versions (the footer's version byte; the legacy footer padded this
+byte with zero, so old files decode as version 0):
+
+* **0 — legacy**: raw blocks, single whole-table Bloom filters in the kSST
+  aux section, no checksums.  Still fully readable.
+* **2 — block I/O**: every block (kSST data/index-entry/meta blocks, RTable
+  records + partitions, VBTable value blocks) is wrapped in a
+  :mod:`~repro.store.blockio` envelope — codec tag, lengths, CRC32 — and
+  tables carry partitioned per-table Bloom filters
+  (:mod:`~repro.store.filter`): kSSTs in the aux section, vSSTs in the
+  footer's aux slot.  A checksum failure raises
+  :class:`~repro.store.blockio.BlockCorruptionError` instead of returning
+  damaged bytes.  LogTable blob files stay raw: they have no footer and KA
+  entries address records directly.
 
 Readers charge every device read to the :class:`~repro.store.device.IOClass`
 passed by the caller, so the same reader serves user gets (USER_READ),
@@ -16,20 +31,26 @@ from __future__ import annotations
 
 import struct
 from bisect import bisect_left
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import msgpack
 
-from .blocks import BlockCache, BloomFilter, decode_record, encode_record
+from .blockio import (CODEC_NONE, CODECS, decode_block, encode_block,
+                      iter_blocks)
+from .blocks import BlockCache, decode_record, encode_record
 from .device import BlockDevice, IOClass
+from .filter import BloomFilter, build_filter, decode_filter
 from .format import (VT_INDEX_KA, VT_INDEX_KF,
                      entry_value_size, entry_vsst, pack_ikey, unpack_ikey)
 
-FOOTER = struct.Struct("<6QBxxxxxxx")
+FOOTER = struct.Struct("<6QBBxxxxxx")
 TABLE_BTABLE = 0
 TABLE_DTABLE = 1
 TABLE_RTABLE = 2
 TABLE_LOG = 3
+
+FMT_LEGACY = 0   # pre-block-I/O files: raw blocks, whole-table blooms
+FMT_V2 = 2       # enveloped blocks (codec + CRC32), partitioned filters
 
 Entry = Tuple[bytes, int, int, bytes]  # (ukey, seq, vtype, payload)
 
@@ -49,6 +70,18 @@ def _unpack_entries_block(buf: bytes) -> List[Entry]:
         ukey, seq, vtype = unpack_ikey(ikey)
         entries.append((ukey, seq, vtype, payload))
     return entries
+
+
+def _encoder(device: BlockDevice, codec: str, min_ratio: float,
+             label) -> Callable[[bytes], bytes]:
+    """Per-writer envelope encoder bound to the device's codec stats."""
+    cid = CODECS.get(codec, CODEC_NONE)
+    stats = device.block_stats
+
+    def enc(payload: bytes) -> bytes:
+        return encode_block(payload, cid, min_ratio=min_ratio, stats=stats,
+                            label=label, device=device)
+    return enc
 
 
 class _SectionWriter:
@@ -76,15 +109,19 @@ class _SectionWriter:
         self._cur = []
         self._cur_bytes = 0
 
-    def finish(self, base_off: int) -> Tuple[bytes, List[Tuple[bytes, bytes, int, int]]]:
+    def finish(self, base_off: int,
+               enc: Optional[Callable[[bytes], bytes]] = None
+               ) -> Tuple[bytes, List[Tuple[bytes, bytes, int, int]]]:
         self._seal()
         out = bytearray()
         fixed = []
         off = base_off
-        for blk, (fk, lk, _, ln) in zip(self.blocks, self.index):
+        for blk, (fk, lk, _, _) in zip(self.blocks, self.index):
+            if enc is not None:
+                blk = enc(blk)
             out += blk
-            fixed.append((fk, lk, off, ln))
-            off += ln
+            fixed.append((fk, lk, off, len(blk)))
+            off += len(blk)
         return bytes(out), fixed
 
 
@@ -96,6 +133,10 @@ class TableProps(dict):
     value_refs         — {vsst_fid: [entries, bytes]} dependency map
                          (TerarkDB-style kSST→vSST dependencies),
     table_type, smallest, largest.
+
+    Sizes other than ``file_size``/``data_bytes`` are *logical* bytes —
+    compression changes the physical layout, never the accounting the
+    compaction picker and placement engine see.
     """
 
 
@@ -109,13 +150,21 @@ class KTableWriter:
     DTable (paper Fig. 9a) keeps inline small-KV records in *data blocks*
     and KA/KF index entries in *index-entry blocks* so GC-Lookup touches
     only the latter.
+
+    ``level`` labels this table's blocks in the device's codec stats (per
+    tree level bytes-before/after); ``fmt_version=FMT_LEGACY`` reproduces
+    the pre-block-I/O format byte for byte (upgrade tests).
     """
 
     def __init__(self, device: BlockDevice, block_bytes: int = 4096,
-                 dtable: bool = False, bits_per_key: int = 10) -> None:
+                 dtable: bool = False, bits_per_key: int = 10,
+                 codec: str = "none", min_ratio: float = 1.0,
+                 level: int = 0, fmt_version: int = FMT_V2) -> None:
         self.device = device
         self.dtable = dtable
         self.bits_per_key = bits_per_key
+        self.fmt_version = fmt_version
+        self._enc = _encoder(device, codec, min_ratio, level)
         self.data = _SectionWriter(block_bytes)
         self.idxe = _SectionWriter(block_bytes) if dtable else self.data
         self.keys_data: List[bytes] = []
@@ -157,22 +206,34 @@ class KTableWriter:
     def finish(self, cls: IOClass = IOClass.FLUSH,
                fid: Optional[int] = None) -> Tuple[int, TableProps]:
         fid = self.device.create() if fid is None else fid
-        data_bytes, data_idx = self.data.finish(0)
+        enc = self._enc if self.fmt_version else None
+        data_bytes, data_idx = self.data.finish(0, enc)
         sections = bytearray(data_bytes)
         if self.dtable:
-            idxe_bytes, idxe_idx = self.idxe.finish(len(sections))
+            idxe_bytes, idxe_idx = self.idxe.finish(len(sections), enc)
             sections += idxe_bytes
         else:
             idxe_idx = []
-        bloom_d = BloomFilter.build(self.keys_data, self.bits_per_key).encode()
-        bloom_i = BloomFilter.build(self.keys_idxe, self.bits_per_key).encode() \
-            if self.dtable else b""
+        if self.fmt_version:
+            bloom_d = build_filter(self.keys_data, self.bits_per_key)
+            bloom_i = build_filter(self.keys_idxe, self.bits_per_key) \
+                if self.dtable else b""
+        else:
+            bloom_d = BloomFilter.build(self.keys_data,
+                                        self.bits_per_key).encode()
+            bloom_i = BloomFilter.build(self.keys_idxe,
+                                        self.bits_per_key).encode() \
+                if self.dtable else b""
         index_payload = msgpack.packb(
             {"data": data_idx, "idxe": idxe_idx}, use_bin_type=True)
+        if enc is not None:
+            index_payload = enc(index_payload)
         idx_off = len(sections)
         sections += index_payload
         aux = msgpack.packb({"bloom_d": bloom_d, "bloom_i": bloom_i},
                             use_bin_type=True)
+        if enc is not None:
+            aux = enc(aux)
         aux_off = len(sections)
         sections += aux
         props = TableProps(
@@ -182,11 +243,13 @@ class KTableWriter:
             table_type=TABLE_DTABLE if self.dtable else TABLE_BTABLE,
             smallest=self.smallest or b"", largest=self.largest or b"")
         props_b = msgpack.packb(dict(props), use_bin_type=True)
+        if enc is not None:
+            props_b = enc(props_b)
         props_off = len(sections)
         sections += props_b
         sections += FOOTER.pack(props_off, len(props_b), idx_off,
                                 len(index_payload), aux_off, len(aux),
-                                props["table_type"])
+                                props["table_type"], self.fmt_version)
         self.device.append(fid, bytes(sections), cls)
         props["file_size"] = len(sections)
         return fid, props
@@ -199,17 +262,31 @@ class RTableWriter:
     ``(key, offset, length)`` tuple per record, split into partitions so GC
     and point reads load only the partitions they need (partitioned index,
     paper III-B.1).
+
+    Under ``FMT_V2`` each record is individually enveloped (records stay
+    individually addressable — ``add`` returns the envelope span, and
+    contiguous records remain contiguous for the adaptive-readahead span
+    reads), and the footer's aux slot carries a partitioned Bloom filter
+    over the key set.
     """
 
-    def __init__(self, device: BlockDevice, index_partition: int = 64) -> None:
+    def __init__(self, device: BlockDevice, index_partition: int = 64,
+                 codec: str = "none", min_ratio: float = 1.0,
+                 bits_per_key: int = 10,
+                 fmt_version: int = FMT_V2) -> None:
         self.device = device
         self.index_partition = index_partition
+        self.bits_per_key = bits_per_key
+        self.fmt_version = fmt_version
+        self._enc = _encoder(device, codec, min_ratio, "value")
         self.buf = bytearray()
         self.dense: List[Tuple[bytes, int, int]] = []
         self.total_value_bytes = 0
 
     def add(self, ukey: bytes, value: bytes) -> Tuple[int, int]:
         rec = encode_record(ukey, value)
+        if self.fmt_version:
+            rec = self._enc(rec)
         off = len(self.buf)
         self.buf += rec
         self.dense.append((ukey, off, len(rec)))
@@ -227,12 +304,15 @@ class RTableWriter:
     def finish(self, cls: IOClass = IOClass.FLUSH,
                fid: Optional[int] = None) -> Tuple[int, TableProps]:
         fid = self.device.create() if fid is None else fid
+        enc = self._enc if self.fmt_version else None
         sections = bytearray(self.buf)
         partitions: List[bytes] = []
         top: List[Tuple[bytes, int, int]] = []
         for i in range(0, len(self.dense), self.index_partition):
             part = self.dense[i:i + self.index_partition]
             pb = msgpack.packb(part, use_bin_type=True)
+            if enc is not None:
+                pb = enc(pb)
             partitions.append(pb)
             top.append((part[-1][0], -1, len(pb)))
         idx_off = len(sections)
@@ -243,18 +323,33 @@ class RTableWriter:
             fixed_top.append((lk, off, ln))
             off += ln
         top_b = msgpack.packb(fixed_top, use_bin_type=True)
+        if enc is not None:
+            top_b = enc(top_b)
         top_off = len(sections)
         sections += top_b
+        if self.fmt_version:
+            filt = build_filter([k for k, _, _ in self.dense],
+                                self.bits_per_key)
+            if filt:
+                filt = enc(filt)
+            aux_off, aux_len = (len(sections), len(filt)) if filt else (0, 0)
+            sections += filt
+        else:
+            # Legacy footer reused the aux slot for the partition base.
+            aux_off, aux_len = idx_off, 0
         props = TableProps(
             num_entries=len(self.dense), total_value_bytes=self.total_value_bytes,
             data_bytes=len(self.buf), table_type=TABLE_RTABLE,
             smallest=self.dense[0][0] if self.dense else b"",
             largest=self.dense[-1][0] if self.dense else b"")
         props_b = msgpack.packb(dict(props), use_bin_type=True)
+        if enc is not None:
+            props_b = enc(props_b)
         props_off = len(sections)
         sections += props_b
         sections += FOOTER.pack(props_off, len(props_b), top_off, len(top_b),
-                                idx_off, 0, TABLE_RTABLE)
+                                aux_off, aux_len, TABLE_RTABLE,
+                                self.fmt_version)
         self.device.append(fid, bytes(sections), cls)
         props["file_size"] = len(sections)
         return fid, props
@@ -265,9 +360,15 @@ class VBTableWriter:
     blocks with a *sparse* index — GC must read whole data blocks and cannot
     lazily skip invalid values (the deficiency RTable fixes)."""
 
-    def __init__(self, device: BlockDevice, block_bytes: int = 16384) -> None:
+    def __init__(self, device: BlockDevice, block_bytes: int = 16384,
+                 codec: str = "none", min_ratio: float = 1.0,
+                 bits_per_key: int = 10,
+                 fmt_version: int = FMT_V2) -> None:
         self.device = device
         self.block_bytes = block_bytes
+        self.bits_per_key = bits_per_key
+        self.fmt_version = fmt_version
+        self._enc = _encoder(device, codec, min_ratio, "value")
         self.blocks: List[List[Tuple[bytes, bytes]]] = [[]]
         self._cur_bytes = 0
         self.total_value_bytes = 0
@@ -294,8 +395,10 @@ class VBTableWriter:
     def finish(self, cls: IOClass = IOClass.FLUSH,
                fid: Optional[int] = None) -> Tuple[int, TableProps]:
         fid = self.device.create() if fid is None else fid
+        enc = self._enc if self.fmt_version else None
         sections = bytearray()
         sparse: List[Tuple[bytes, bytes, int, int]] = []
+        keys: List[bytes] = []
         smallest = largest = b""
         for blk in self.blocks:
             if not blk:
@@ -303,23 +406,40 @@ class VBTableWriter:
             payload = bytearray()
             for k, v in blk:
                 payload += encode_record(k, v)
+                keys.append(k)
+            payload = bytes(payload)
+            if enc is not None:
+                payload = enc(payload)
             sparse.append((blk[0][0], blk[-1][0], len(sections), len(payload)))
             sections += payload
             if not smallest:
                 smallest = blk[0][0]
             largest = blk[-1][0]
+        data_end = len(sections)
         idx_b = msgpack.packb(sparse, use_bin_type=True)
+        if enc is not None:
+            idx_b = enc(idx_b)
         idx_off = len(sections)
         sections += idx_b
+        aux_off = aux_len = 0
+        if self.fmt_version:
+            filt = build_filter(keys, self.bits_per_key)
+            if filt:
+                filt = enc(filt)
+                aux_off, aux_len = len(sections), len(filt)
+                sections += filt
         props = TableProps(num_entries=self.n,
                            total_value_bytes=self.total_value_bytes,
-                           data_bytes=idx_off, table_type=TABLE_BTABLE,
+                           data_bytes=data_end, table_type=TABLE_BTABLE,
                            smallest=smallest, largest=largest)
         props_b = msgpack.packb(dict(props), use_bin_type=True)
+        if enc is not None:
+            props_b = enc(props_b)
         props_off = len(sections)
         sections += props_b
         sections += FOOTER.pack(props_off, len(props_b), idx_off, len(idx_b),
-                                0, 0, TABLE_BTABLE)
+                                aux_off, aux_len, TABLE_BTABLE,
+                                self.fmt_version)
         self.device.append(fid, bytes(sections), cls)
         props["file_size"] = len(sections)
         return fid, props
@@ -327,7 +447,12 @@ class VBTableWriter:
 
 class LogTableWriter:
     """Unordered value log (WiscKey vLog / Titan blob file): records are
-    addressed by (offset, size) held in the KA index entries."""
+    addressed by (offset, size) held in the KA index entries.
+
+    Stays raw (no envelopes): it has no footer to version, and KA offsets
+    address records directly — integrity of the inline small-value path is
+    carried by the kSSTs that index it.
+    """
 
     def __init__(self, device: BlockDevice) -> None:
         self.device = device
@@ -368,11 +493,22 @@ class LogTableWriter:
 
 class _Footer:
     __slots__ = ("props_off", "props_len", "idx_off", "idx_len",
-                 "aux_off", "aux_len", "ttype")
+                 "aux_off", "aux_len", "ttype", "version")
 
     def __init__(self, raw: bytes) -> None:
         (self.props_off, self.props_len, self.idx_off, self.idx_len,
-         self.aux_off, self.aux_len, self.ttype) = FOOTER.unpack(raw)
+         self.aux_off, self.aux_len, self.ttype,
+         self.version) = FOOTER.unpack(raw)
+
+
+def _read_meta(device: BlockDevice, fid: int, off: int, ln: int,
+               cls: IOClass, version: int) -> bytes:
+    """Read + (for v2) unwrap one metadata block."""
+    raw = device.read(fid, off, ln, cls)
+    if version:
+        raw, _ = decode_block(raw, stats=device.block_stats, fid=fid,
+                              offset=off, device=device)
+    return raw
 
 
 class KTableReader:
@@ -391,28 +527,40 @@ class KTableReader:
         fsize = device.size(fid)
         foot = _Footer(device.read(fid, fsize - FOOTER.size, FOOTER.size, open_cls))
         self.ttype = foot.ttype
+        self.version = foot.version
         idx = msgpack.unpackb(
-            device.read(fid, foot.idx_off, foot.idx_len, open_cls), raw=False, strict_map_key=False)
+            _read_meta(device, fid, foot.idx_off, foot.idx_len, open_cls,
+                       self.version), raw=False, strict_map_key=False)
         self.data_idx = [(bytes(a), bytes(b), c, d) for a, b, c, d in idx["data"]]
         self.idxe_idx = [(bytes(a), bytes(b), c, d) for a, b, c, d in idx["idxe"]]
         aux = msgpack.unpackb(
-            device.read(fid, foot.aux_off, foot.aux_len, open_cls), raw=False, strict_map_key=False)
-        self.bloom_d = BloomFilter.decode(aux["bloom_d"]) if aux["bloom_d"] else None
-        self.bloom_i = BloomFilter.decode(aux["bloom_i"]) if aux["bloom_i"] else None
+            _read_meta(device, fid, foot.aux_off, foot.aux_len, open_cls,
+                       self.version), raw=False, strict_map_key=False)
+        self.bloom_d = decode_filter(aux["bloom_d"])
+        self.bloom_i = decode_filter(aux["bloom_i"])
         self.props = msgpack.unpackb(
-            device.read(fid, foot.props_off, foot.props_len, open_cls), raw=False, strict_map_key=False)
+            _read_meta(device, fid, foot.props_off, foot.props_len, open_cls,
+                       self.version), raw=False, strict_map_key=False)
 
     # -- block access ---------------------------------------------------
     def _load_block(self, off: int, ln: int, cls: IOClass,
                     high_priority: bool) -> List[Entry]:
         ckey = (self.fid, off)
-        raw = self.cache.get(ckey)
-        if raw is None:
+        blk = self.cache.get(ckey)
+        if blk is None:
             raw = self.device.read(self.fid, off, ln, cls)
-            self.cache.put(ckey, raw, high_priority=high_priority)
+            if self.version:
+                # Cache the *decoded* block, charge the compressed size.
+                blk, _ = decode_block(raw, stats=self.device.block_stats,
+                                      fid=self.fid, offset=off,
+                                      device=self.device)
+            else:
+                blk = raw
+            self.cache.put(ckey, blk, high_priority=high_priority,
+                           charge=len(raw))
         else:
             self.device.charge_cpu()
-        return _unpack_entries_block(raw)
+        return _unpack_entries_block(blk)
 
     @staticmethod
     def _find_block(index: List[Tuple[bytes, bytes, int, int]],
@@ -430,17 +578,24 @@ class KTableReader:
         return (off, ln)
 
     def _get_in(self, index: List[Tuple[bytes, bytes, int, int]],
-                bloom: Optional[BloomFilter], ukey: bytes, cls: IOClass,
+                bloom, ukey: bytes, cls: IOClass,
                 high_priority: bool,
                 max_seq: Optional[int] = None) -> Optional[Entry]:
-        if bloom is not None and not bloom.may_contain(ukey):
-            self.device.charge_cpu()
-            return None
+        bs = self.device.block_stats
+        if bloom is not None:
+            bs.filter_probes += 1
+            if not bloom.may_contain(ukey):
+                # Negative lookup answered with zero device hops.
+                bs.filter_negatives += 1
+                self.device.charge_cpu()
+                return None
         lasts = [e[1] for e in index]
         i = bisect_left(lasts, ukey)
         if i >= len(index) or ukey < index[i][0]:
             # Gap between block i-1's last key and block i's first: no
             # block can contain the key; skip the wasted read.
+            if bloom is not None and max_seq is None:
+                bs.filter_false_pos += 1
             return None
         best: Optional[Entry] = None
         while True:
@@ -458,6 +613,8 @@ class KTableReader:
             i += 1
             if i >= len(index) or index[i][0] != ukey:
                 break
+        if best is None and bloom is not None and max_seq is None:
+            bs.filter_false_pos += 1
         return best
 
     def get(self, ukey: bytes, cls: IOClass = IOClass.USER_READ,
@@ -506,7 +663,13 @@ class KTableReader:
         start = index[0][2]
         end = index[-1][2] + index[-1][3]
         buf = self.device.read(self.fid, start, end - start, cls)
-        yield from _unpack_entries_block(buf)
+        if self.version:
+            for _, payload in iter_blocks(
+                    buf, stats=self.device.block_stats, fid=self.fid,
+                    base_offset=start, device=self.device):
+                yield from _unpack_entries_block(payload)
+        else:
+            yield from _unpack_entries_block(buf)
 
     def _iter_section(self, index, cls: IOClass, hp: bool) -> Iterator[Entry]:
         for _, _, off, ln in index:
@@ -544,7 +707,13 @@ def _merge_sorted(a: Iterator[Entry], b: Iterator[Entry]) -> Iterator[Entry]:
 
 
 class RTableReader:
-    """Reader for RTable vSSTs: dense partitioned index → lazy value reads."""
+    """Reader for RTable vSSTs: dense partitioned index → lazy value reads.
+
+    v2 additions: a key-set Bloom filter answers negative lookups with zero
+    device hops, and decoded value records read on behalf of USER_READ are
+    admitted to the shared cache (ghost-gated, low priority) — separated
+    reads on the flagship format used to bypass the cache entirely.
+    """
 
     def __init__(self, device: BlockDevice, fid: int, cache: BlockCache,
                  open_cls: IOClass = IOClass.USER_READ) -> None:
@@ -553,22 +722,39 @@ class RTableReader:
         self.cache = cache
         fsize = device.size(fid)
         foot = _Footer(device.read(fid, fsize - FOOTER.size, FOOTER.size, open_cls))
+        self.version = foot.version
         top = msgpack.unpackb(
-            device.read(fid, foot.idx_off, foot.idx_len, open_cls), raw=False, strict_map_key=False)
+            _read_meta(device, fid, foot.idx_off, foot.idx_len, open_cls,
+                       self.version), raw=False, strict_map_key=False)
         self.top = [(bytes(k), off, ln) for k, off, ln in top]
+        self.filter = None
+        if self.version and foot.aux_len:
+            self.filter = decode_filter(
+                _read_meta(device, fid, foot.aux_off, foot.aux_len, open_cls,
+                           self.version))
         self.props = msgpack.unpackb(
-            device.read(fid, foot.props_off, foot.props_len, open_cls), raw=False, strict_map_key=False)
+            _read_meta(device, fid, foot.props_off, foot.props_len, open_cls,
+                       self.version), raw=False, strict_map_key=False)
+
+    def _payload(self, raw: bytes, off: int) -> bytes:
+        if not self.version:
+            return raw
+        payload, _ = decode_block(raw, stats=self.device.block_stats,
+                                  fid=self.fid, offset=off,
+                                  device=self.device)
+        return payload
 
     def _load_partition(self, off: int, ln: int, cls: IOClass
                         ) -> List[Tuple[bytes, int, int]]:
         ckey = (self.fid, off)
-        raw = self.cache.get(ckey)
-        if raw is None:
+        blk = self.cache.get(ckey)
+        if blk is None:
             raw = self.device.read(self.fid, off, ln, cls)
-            self.cache.put(ckey, raw, high_priority=True)
+            blk = self._payload(raw, off)
+            self.cache.put(ckey, blk, high_priority=True, charge=len(raw))
         else:
             self.device.charge_cpu()
-        return [(bytes(k), o, l) for k, o, l in msgpack.unpackb(raw, raw=False, strict_map_key=False)]
+        return [(bytes(k), o, l) for k, o, l in msgpack.unpackb(blk, raw=False, strict_map_key=False)]
 
     def read_keys(self, cls: IOClass = IOClass.GC_READ
                   ) -> List[Tuple[bytes, int, int]]:
@@ -583,16 +769,31 @@ class RTableReader:
         out: List[Tuple[bytes, int, int]] = []
         pos = 0
         for _, off, ln in self.top:
-            part = msgpack.unpackb(buf[pos:pos + ln], raw=False,
-                                   strict_map_key=False)
+            chunk = buf[pos:pos + ln]
             pos += ln
+            part = msgpack.unpackb(self._payload(chunk, off), raw=False,
+                                   strict_map_key=False)
             out.extend((bytes(k), o, l) for k, o, l in part)
         return out
 
     def read_record(self, off: int, ln: int,
                     cls: IOClass = IOClass.USER_READ) -> Tuple[bytes, bytes]:
-        buf = self.device.read(self.fid, off, ln, cls)
-        k, v, _ = decode_record(buf, 0)
+        # Foreground value reads go through the shared cache (admission is
+        # ghost-gated inside the cache core); background GC/compaction
+        # reads stay uncached so one GC pass cannot flush the working set.
+        use_cache = cls == IOClass.USER_READ
+        ckey = (self.fid, off)
+        if use_cache:
+            blk = self.cache.get(ckey)
+            if blk is not None:
+                self.device.charge_cpu()
+                k, v, _ = decode_record(blk, 0)
+                return k, v
+        raw = self.device.read(self.fid, off, ln, cls)
+        blk = self._payload(raw, off)
+        if use_cache:
+            self.cache.put(ckey, blk, charge=len(raw))
+        k, v, _ = decode_record(blk, 0)
         return k, v
 
     def read_span(self, off: int, ln: int,
@@ -601,24 +802,44 @@ class RTableReader:
         the adaptive-readahead primitive (paper III-B.4)."""
         buf = self.device.read(self.fid, off, ln, cls)
         out = []
-        pos = 0
-        while pos < len(buf):
-            k, v, pos = decode_record(buf, pos)
-            out.append((k, v))
+        if self.version:
+            for _, payload in iter_blocks(
+                    buf, stats=self.device.block_stats, fid=self.fid,
+                    base_offset=off, device=self.device):
+                k, v, _ = decode_record(payload, 0)
+                out.append((k, v))
+        else:
+            pos = 0
+            while pos < len(buf):
+                k, v, pos = decode_record(buf, pos)
+                out.append((k, v))
         return out
 
     def get(self, ukey: bytes, cls: IOClass = IOClass.USER_READ
             ) -> Optional[bytes]:
+        bs = self.device.block_stats
+        if self.filter is not None:
+            bs.vsst_filter_probes += 1
+            if not self.filter.may_contain(ukey):
+                bs.vsst_filter_negatives += 1
+                self.device.charge_cpu()
+                return None
+        user = cls == IOClass.USER_READ
         lasts = [t[0] for t in self.top]
         i = bisect_left(lasts, ukey)
-        if i >= len(self.top):
-            return None
-        part = self._load_partition(self.top[i][1], self.top[i][2], cls)
-        keys = [p[0] for p in part]
-        j = bisect_left(keys, ukey)
-        if j < len(part) and part[j][0] == ukey:
-            _, off, ln = part[j]
-            return self.read_record(off, ln, cls)[1]
+        if i < len(self.top):
+            part = self._load_partition(self.top[i][1], self.top[i][2], cls)
+            keys = [p[0] for p in part]
+            j = bisect_left(keys, ukey)
+            if j < len(part) and part[j][0] == ukey:
+                if user:
+                    bs.vsst_probe_hits += 1
+                _, off, ln = part[j]
+                return self.read_record(off, ln, cls)[1]
+        if user:
+            bs.vsst_probe_misses += 1
+        if self.filter is not None:
+            bs.vsst_filter_false_pos += 1
         return None
 
 
@@ -632,37 +853,65 @@ class VBTableReader:
         self.cache = cache
         fsize = device.size(fid)
         foot = _Footer(device.read(fid, fsize - FOOTER.size, FOOTER.size, open_cls))
+        self.version = foot.version
         idx = msgpack.unpackb(
-            device.read(fid, foot.idx_off, foot.idx_len, open_cls), raw=False, strict_map_key=False)
+            _read_meta(device, fid, foot.idx_off, foot.idx_len, open_cls,
+                       self.version), raw=False, strict_map_key=False)
         self.sparse = [(bytes(a), bytes(b), c, d) for a, b, c, d in idx]
+        self.filter = None
+        if self.version and foot.aux_len:
+            self.filter = decode_filter(
+                _read_meta(device, fid, foot.aux_off, foot.aux_len, open_cls,
+                           self.version))
         self.props = msgpack.unpackb(
-            device.read(fid, foot.props_off, foot.props_len, open_cls), raw=False, strict_map_key=False)
+            _read_meta(device, fid, foot.props_off, foot.props_len, open_cls,
+                       self.version), raw=False, strict_map_key=False)
 
     def _load_block(self, off: int, ln: int, cls: IOClass
                     ) -> List[Tuple[bytes, bytes]]:
         ckey = (self.fid, off)
-        raw = self.cache.get(ckey)
-        if raw is None:
+        blk = self.cache.get(ckey)
+        if blk is None:
             raw = self.device.read(self.fid, off, ln, cls)
-            self.cache.put(ckey, raw)
+            if self.version:
+                blk, _ = decode_block(raw, stats=self.device.block_stats,
+                                      fid=self.fid, offset=off,
+                                      device=self.device)
+            else:
+                blk = raw
+            self.cache.put(ckey, blk, charge=len(raw))
         else:
             self.device.charge_cpu()
         out = []
         pos = 0
-        while pos < len(raw):
-            k, v, pos = decode_record(raw, pos)
+        while pos < len(blk):
+            k, v, pos = decode_record(blk, pos)
             out.append((k, v))
         return out
 
     def get(self, ukey: bytes, cls: IOClass = IOClass.USER_READ
             ) -> Optional[bytes]:
+        bs = self.device.block_stats
+        if self.filter is not None:
+            bs.vsst_filter_probes += 1
+            if not self.filter.may_contain(ukey):
+                bs.vsst_filter_negatives += 1
+                self.device.charge_cpu()
+                return None
+        user = cls == IOClass.USER_READ
         lasts = [e[1] for e in self.sparse]
         i = bisect_left(lasts, ukey)
-        if i >= len(self.sparse):
-            return None
-        for k, v in self._load_block(self.sparse[i][2], self.sparse[i][3], cls):
-            if k == ukey:
-                return v
+        if i < len(self.sparse):
+            for k, v in self._load_block(self.sparse[i][2],
+                                         self.sparse[i][3], cls):
+                if k == ukey:
+                    if user:
+                        bs.vsst_probe_hits += 1
+                    return v
+        if user:
+            bs.vsst_probe_misses += 1
+        if self.filter is not None:
+            bs.vsst_filter_false_pos += 1
         return None
 
     def scan_all(self, cls: IOClass = IOClass.GC_READ
@@ -675,10 +924,19 @@ class VBTableReader:
         end = self.sparse[-1][2] + self.sparse[-1][3]
         buf = self.device.read(self.fid, 0, end, cls)
         out = []
-        pos = 0
-        while pos < len(buf):
-            k, v, pos = decode_record(buf, pos)
-            out.append((k, v))
+        if self.version:
+            for _, payload in iter_blocks(
+                    buf, stats=self.device.block_stats, fid=self.fid,
+                    base_offset=0, device=self.device):
+                pos = 0
+                while pos < len(payload):
+                    k, v, pos = decode_record(payload, pos)
+                    out.append((k, v))
+        else:
+            pos = 0
+            while pos < len(buf):
+                k, v, pos = decode_record(buf, pos)
+                out.append((k, v))
         return out
 
 

@@ -327,8 +327,8 @@ def _apply_cache_ops(core, ops, cap):
             assert core.resident_bytes(s) <= core.quotas[s]
     # byte counters agree with the actual resident entries
     for s in range(core.n_shards):
-        true_bytes = sum(len(v) for v in core._low[s].values()) \
-            + sum(len(v) for v in core._high[s].values())
+        true_bytes = sum(sz for _, sz in core._low[s].values()) \
+            + sum(sz for _, sz in core._high[s].values())
         assert core.resident_bytes(s) == true_bytes
 
 
