@@ -8,7 +8,12 @@ the pipelined group commit actually merges: with T threads open at once
 the commit leader drains ~T groups per WAL sync, cutting the dominant
 20 µs sync latency per op by ~T×.  Latency percentiles (p50/p95/p99 per
 ``write_batch``/``multi_get`` call) are **wall-clock**, i.e. the real
-lock/pipeline overhead a client thread observes.
+lock/pipeline overhead a client thread observes — each worker records
+into a thread-local ``repro.obs.Histogram``, merged after join into the
+store registry's ``wall/concurrent/*`` namespace (so ``Store.metrics()``
+reports them, and ``sim_only`` snapshots exclude them).  Sim-time
+throughput and wall-time tails are thus sourced from the same registry
+but never mixed.
 
 Rows:
   concurrent/<sys>/w-t<T>b<B>   write phase, T threads, batch B
@@ -33,6 +38,7 @@ from typing import List, Tuple
 from .common import SHORT, fast, systems
 from repro.bench import WorkloadSpec, make_db
 from repro.bench.harness import wal_sync_count
+from repro.obs import Histogram
 
 MULTI_GET = 8           # keys per multi_get call in the read phase
 
@@ -47,32 +53,31 @@ def _batches() -> List[int]:
     return [int(x) for x in env.split(",")] if env else [1, 4]
 
 
-def _pct(lats: List[float], p: float) -> float:
-    """p-th percentile of a latency sample, in µs."""
-    if not lats:
-        return 0.0
-    xs = sorted(lats)
-    i = min(len(xs) - 1, int(p / 100.0 * len(xs)))
-    return 1e6 * xs[i]
+def _us(h: Histogram, p: float) -> float:
+    """p-th percentile of a wall-latency histogram, in µs."""
+    return 1e6 * h.percentile(p)
 
 
 def _key(tid: int, i: int) -> bytes:
     return b"c%02d-%06d" % (tid, i)
 
 
-def _drive(db, n_threads: int, fn) -> Tuple[float, List[float]]:
-    """Run ``fn(tid, lats)`` on ``n_threads`` threads behind a barrier;
-    return (simulated seconds elapsed, merged per-call wall latencies).
-    Worker exceptions are re-raised — a deadlock shows up as a hang, a
-    lost-update as a failed check downstream, neither is swallowed."""
+def _drive(db, n_threads: int, fn, phase: str) -> Tuple[float, Histogram]:
+    """Run ``fn(tid, hist)`` on ``n_threads`` threads behind a barrier;
+    return (simulated seconds elapsed, merged wall-latency histogram).
+    Each worker records into a private Histogram (no locking on the hot
+    path); after join they merge into the registry histogram
+    ``wall/concurrent/<phase>``.  Worker exceptions are re-raised — a
+    deadlock shows up as a hang, a lost-update as a failed check
+    downstream, neither is swallowed."""
     barrier = threading.Barrier(n_threads)
-    lat: List[List[float]] = [[] for _ in range(n_threads)]
+    locals_: List[Histogram] = [Histogram() for _ in range(n_threads)]
     errs: List[BaseException] = []
 
     def runner(tid: int) -> None:
         try:
             barrier.wait()
-            fn(tid, lat[tid])
+            fn(tid, locals_[tid])
         except BaseException as e:  # noqa: BLE001 — surfaced below
             errs.append(e)
 
@@ -85,9 +90,9 @@ def _drive(db, n_threads: int, fn) -> Tuple[float, List[float]]:
         t.join()
     if errs:
         raise errs[0]
-    merged: List[float] = []
-    for xs in lat:
-        merged.extend(xs)
+    merged = db.obs.histogram(f"wall/concurrent/{phase}")
+    for h in locals_:
+        merged.merge(h)
     return db.clock.now - sim0, merged
 
 
@@ -95,42 +100,42 @@ def _write_phase(db, n_threads: int, total_ops: int, batch: int,
                  value: bytes):
     per = total_ops // n_threads
 
-    def work(tid: int, lats: List[float]) -> None:
+    def work(tid: int, hist: Histogram) -> None:
         buf = []
         for i in range(per):
             buf.append(("put", _key(tid, i), value))
             if len(buf) >= batch:
                 t0 = time.perf_counter()
                 db.write_batch(buf)
-                lats.append(time.perf_counter() - t0)
+                hist.record(time.perf_counter() - t0)
                 buf.clear()
         if buf:
             db.write_batch(buf)
 
     s0 = wal_sync_count(db)
-    sim, lats = _drive(db, n_threads, work)
+    sim, hist = _drive(db, n_threads, work, "write")
     ops = per * n_threads
-    return sim, lats, ops, wal_sync_count(db) - s0
+    return sim, hist, ops, wal_sync_count(db) - s0
 
 
 def _read_phase(db, n_threads: int, total_ops: int, n_keys: int,
                 value: bytes):
     per = total_ops // n_threads
 
-    def work(tid: int, lats: List[float]) -> None:
+    def work(tid: int, hist: Histogram) -> None:
         i = 0
         while i < per:
             keys = [_key(tid, (i + j) * 7919 % n_keys)
                     for j in range(MULTI_GET)]
             t0 = time.perf_counter()
             got = db.multi_get(keys)
-            lats.append(time.perf_counter() - t0)
+            hist.record(time.perf_counter() - t0)
             if any(v != value for v in got):
                 raise AssertionError("lost write under concurrency")
             i += MULTI_GET
 
-    sim, lats = _drive(db, n_threads, work)
-    return sim, lats, per * n_threads
+    sim, hist = _drive(db, n_threads, work, "read")
+    return sim, hist, per * n_threads
 
 
 def run() -> list:
@@ -146,28 +151,28 @@ def run() -> list:
         for batch in _batches():
             for nt in _threads():
                 db = make_db(system, spec, n_shards=4)
-                sim, lats, ops, syncs = _write_phase(
+                sim, wh, ops, syncs = _write_phase(
                     db, nt, total_ops, batch, value)
                 db.drain()
                 us = 1e6 * sim / max(1, ops)
                 kops[(nt, batch)] = ops / max(sim, 1e-12) / 1e3
                 rows.append(
                     f"concurrent/{SHORT[system]}/w-t{nt}b{batch},{us:.2f},"
-                    f"kops={kops[(nt, batch)]:.2f} "
+                    f"sim_kops={kops[(nt, batch)]:.2f} "
                     f"wal/op={syncs / max(1, ops):.4f} "
-                    f"p50={_pct(lats, 50):.1f}us "
-                    f"p95={_pct(lats, 95):.1f}us "
-                    f"p99={_pct(lats, 99):.1f}us")
+                    f"wall_p50={_us(wh, 50):.1f}us "
+                    f"wall_p95={_us(wh, 95):.1f}us "
+                    f"wall_p99={_us(wh, 99):.1f}us")
                 if nt == max(_threads()) and batch == max(_batches()):
-                    sim, rl, rops = _read_phase(
+                    sim, rh, rops = _read_phase(
                         db, nt, total_ops, total_ops // nt, value)
                     us_r = 1e6 * sim / max(1, rops)
                     rows.append(
                         f"concurrent/{SHORT[system]}/r-t{nt},{us_r:.2f},"
-                        f"kops={rops / max(sim, 1e-12) / 1e3:.2f} "
-                        f"p50={_pct(rl, 50):.1f}us "
-                        f"p95={_pct(rl, 95):.1f}us "
-                        f"p99={_pct(rl, 99):.1f}us")
+                        f"sim_kops={rops / max(sim, 1e-12) / 1e3:.2f} "
+                        f"wall_p50={_us(rh, 50):.1f}us "
+                        f"wall_p95={_us(rh, 95):.1f}us "
+                        f"wall_p99={_us(rh, 99):.1f}us")
         # Aggregate-speedup row: 4 threads vs 1 at equal batch size.  The
         # ok-gate sits on the smallest batch — per-op commits are where
         # cross-thread sync coalescing carries the speedup; at larger

@@ -12,6 +12,13 @@ Prints ``name,us_per_call,derived`` CSV rows.  Selection:
 run's output as an artifact and the perf trajectory stays inspectable
 per-PR.
 
+``--metrics-json=PATH`` dumps each benchmark store's final
+``Store.metrics()`` snapshot (registry + amplification ledger), keyed
+by system label; ``--trace=PATH`` records every store's job/commit/IO
+timeline as Chrome trace-event JSON (load in Perfetto, or lint with
+``python -m repro.obs.lint PATH``).  Both hook every ``make_db`` call
+via ``repro.obs.runtime`` and are no-ops when absent.
+
 Suites:
   space_time     Fig. 3/14-16  (throughput + space amp + tail latency)
   gc_breakdown   Fig. 4        (GC step latency shares)
@@ -49,9 +56,15 @@ import time
 def main() -> None:
     which = set(a for a in sys.argv[1:] if not a.startswith("-"))
     json_path = os.environ.get("REPRO_BENCH_JSON")
+    trace_path = os.environ.get("REPRO_BENCH_TRACE")
+    metrics_path = os.environ.get("REPRO_BENCH_METRICS")
     for a in sys.argv[1:]:
         if a.startswith("--json="):
             json_path = a.split("=", 1)[1]
+        elif a.startswith("--trace="):
+            trace_path = a.split("=", 1)[1]
+        elif a.startswith("--metrics-json="):
+            metrics_path = a.split("=", 1)[1]
     from . import (bench_blocks, bench_cache, bench_concurrent,
                    bench_features, bench_gc_breakdown, bench_micro,
                    bench_placement, bench_sharded, bench_space_sources,
@@ -80,6 +93,8 @@ def main() -> None:
         suites["roofline"] = bench_roofline.run
     except Exception:
         pass
+    from repro.obs import runtime as obs_runtime
+    obs_runtime.configure(trace=trace_path, metrics=metrics_path)
     print("name,us_per_call,derived")
     report = {}
     for name, fn in suites.items():
@@ -103,6 +118,8 @@ def main() -> None:
         with open(json_path, "w") as f:
             json.dump(report, f, indent=2)
         print(f"# wrote {json_path}", file=sys.stderr, flush=True)
+    for p in obs_runtime.flush():
+        print(f"# wrote {p}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,8 @@ from typing import Dict, Iterable, Optional
 from ..core.db import KVStore
 from ..core.options import preset
 from ..core.sharded import ShardedKVStore
+from ..obs import Histogram
+from ..obs import runtime as obs_runtime
 from ..store.format import VT_VALUE
 from .workloads import KEY_BYTES, Op, ScaleConfig, WorkloadSpec
 
@@ -63,6 +65,7 @@ class PhaseResult:
     io_read_bytes: int
     io_write_bytes: int
     p50_us: float = 0.0
+    p95_us: float = 0.0
     p99_us: float = 0.0
     p999_us: float = 0.0
     wal_syncs: int = 0
@@ -103,6 +106,8 @@ def make_db(system: str, spec: WorkloadSpec,
     oracle = Oracle(opts.sep_threshold)
     db.on_user_write = oracle.on_write
     db.oracle = oracle  # type: ignore[attr-defined]
+    # No-op unless benchmarks/run.py was given --trace/--metrics-json.
+    obs_runtime.attach(db, system)
     return db
 
 
@@ -125,7 +130,10 @@ def run_phase(db, name: str, ops: Iterable[Op],
     t0 = db.clock.now
     wall0 = time.perf_counter()
     n = 0
-    lats = [] if capture_latency else None
+    # Latency percentiles come from a log-bucketed repro.obs Histogram
+    # (upper-edge estimates, <=19% relative error) instead of a sorted
+    # list — same machinery that backs Store.metrics().
+    hist = Histogram() if capture_latency else None
 
     wbuf: list = []         # pending ('put'|'del', ...) ops
     gbuf: list = []         # pending get keys
@@ -135,9 +143,8 @@ def run_phase(db, name: str, ops: Iterable[Op],
             return
         b_t0 = db.clock.now
         db.write_batch(wbuf)
-        if lats is not None:
-            per = (db.clock.now - b_t0) / len(wbuf)
-            lats.extend([per] * len(wbuf))
+        if hist is not None:
+            hist.record_n((db.clock.now - b_t0) / len(wbuf), len(wbuf))
         wbuf.clear()
 
     def _flush_gets() -> None:
@@ -145,9 +152,8 @@ def run_phase(db, name: str, ops: Iterable[Op],
             return
         b_t0 = db.clock.now
         db.multi_get(gbuf)
-        if lats is not None:
-            per = (db.clock.now - b_t0) / len(gbuf)
-            lats.extend([per] * len(gbuf))
+        if hist is not None:
+            hist.record_n((db.clock.now - b_t0) / len(gbuf), len(gbuf))
         gbuf.clear()
 
     for op in ops:
@@ -168,18 +174,18 @@ def run_phase(db, name: str, ops: Iterable[Op],
                 _flush_gets()
                 s_t0 = db.clock.now
                 db.read_modify_write(op[1], lambda _cur, v=op[2]: v)
-                if lats is not None:
-                    lats.append(db.clock.now - s_t0)
+                if hist is not None:
+                    hist.record(db.clock.now - s_t0)
             else:
                 _flush_writes()
                 _flush_gets()
                 s_t0 = db.clock.now
                 db.scan(op[1], op[2])
-                if lats is not None:
-                    lats.append(db.clock.now - s_t0)
+                if hist is not None:
+                    hist.record(db.clock.now - s_t0)
             n += 1
             continue
-        if lats is not None:
+        if hist is not None:
             op_t0 = db.clock.now
         if kind == "put":
             db.put(op[1], op[2])
@@ -191,8 +197,8 @@ def run_phase(db, name: str, ops: Iterable[Op],
             db.read_modify_write(op[1], lambda _cur, v=op[2]: v)
         else:
             db.scan(op[1], op[2])
-        if lats is not None:
-            lats.append(db.clock.now - op_t0)
+        if hist is not None:
+            hist.record(db.clock.now - op_t0)
         n += 1
     if batch > 1:
         _flush_writes()
@@ -206,11 +212,11 @@ def run_phase(db, name: str, ops: Iterable[Op],
                       io_read_bytes=st.read_bytes() - r0,
                       io_write_bytes=st.write_bytes() - w0,
                       wal_syncs=wal_sync_count(db) - s0)
-    if lats:
-        lats.sort()
-        res.p50_us = 1e6 * lats[len(lats) // 2]
-        res.p99_us = 1e6 * lats[min(len(lats) - 1, int(len(lats) * 0.99))]
-        res.p999_us = 1e6 * lats[min(len(lats) - 1, int(len(lats) * 0.999))]
+    if hist is not None and hist.count:
+        res.p50_us = 1e6 * hist.percentile(50)
+        res.p95_us = 1e6 * hist.percentile(95)
+        res.p99_us = 1e6 * hist.percentile(99)
+        res.p999_us = 1e6 * hist.percentile(99.9)
     return res
 
 

@@ -63,6 +63,11 @@ class Store(Protocol):
     def drain(self, max_sim_s: float = 1e9) -> None: ...
     def stats(self) -> Dict[str, object]: ...
     def space_usage(self) -> Dict[str, object]: ...
+    # Observability (repro.obs): registry + amplification-ledger
+    # snapshot, and Chrome-trace recording on the simulated clock
+    # (``with db.trace("out.json"): ...``).
+    def metrics(self, *, sim_only: bool = False) -> Dict[str, object]: ...
+    def trace(self, path: Optional[str] = None): ...
 
 
 __all__ = ["KVStore", "Options", "preset", "ShardedKVStore",

@@ -117,6 +117,9 @@ class SharedReadCache:
         self._w_ghost = [0.0] * n
         self._lookups_since_retune = 0
         self.quota_retunes = 0
+        # Observability hook (set by the owning store): called with the
+        # new per-shard quotas after each completed adaptive retune.
+        self.on_retune = None
         # per-shard, per-size-class read heat: value point-reads and the
         # subset whose second hop the cache absorbed.  Cumulative pair for
         # stats, window pair drained by the placement engine.
@@ -380,6 +383,8 @@ class SharedReadCache:
             assert sum(self.quotas) == cap, (self.quotas, cap)
             for s in range(n):
                 self._enforce_quota(s)
+            if self.on_retune is not None:
+                self.on_retune(list(self.quotas))
 
     @staticmethod
     def _normalize(raw: List[float], lo: int, hi: int,

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from contextlib import contextmanager
 from typing import Callable, Iterator, List, Optional, Tuple
 
@@ -130,6 +131,13 @@ class CommitPipeline:
         # pipeline (unit tests) gets a private stand-in.
         self._engine = (core.engine_lock if core is not None
                         else threading.RLock())
+        # Wall-clock time threads spend parked on the commit condition
+        # (distinct from the simulated-time admission stalls in db.py).
+        # Registry-backed under the "wall/" prefix so deterministic
+        # (sim-only) snapshots exclude it.  All writers hold ``_qmu``.
+        self._wallc = (core.device.metrics.counters(
+            "wall/commit_pipeline", {"wait_s": 0.0, "waits": 0})
+            if core is not None else None)
 
     def _drain_write(self, recs: List[bytes], n: int) -> None:
         raise NotImplementedError
@@ -193,13 +201,22 @@ class CommitPipeline:
         with self._qmu:
             self._open_groups -= 1
             self._qcond.notify_all()
+            waited = 0.0
             while True:
                 if self._durable >= self._tls.ticket:
+                    if waited and self._wallc is not None:
+                        self._wallc["wait_s"] += waited
+                        self._wallc["waits"] += 1
                     return               # someone else's sync covered us
                 if not self._leader_active:
                     self._leader_active = True
                     break                # we lead this commit round
+                t0 = time.perf_counter()
                 self._qcond.wait()       # follower: leader will publish
+                waited += time.perf_counter() - t0
+            if waited and self._wallc is not None:
+                self._wallc["wait_s"] += waited
+                self._wallc["waits"] += 1
             # Leader linger: while other groups are still open their
             # records are still arriving; wait so they ride this sync
             # (batch N's append overlaps batch N+1's memtable apply).
@@ -269,7 +286,12 @@ class SoloCommitSink(CommitPipeline):
     def _drain_write(self, recs: List[bytes], n: int) -> None:
         buf = b"".join(recs)
         self.csn += 1
+        tracer = self.core.tracer if self.core is not None else None
+        t0 = self.device.clock.now
         self.device.append(self._wal.fid, buf, IOClass.WAL)
+        if tracer is not None:
+            tracer.span("commit", "commit_round", t0, self.device.clock.now,
+                        {"records": n, "bytes": len(buf), "csn": self.csn})
         if self.core is not None:
             self.core.note_wal_sync(len(buf), n)
 
@@ -349,7 +371,12 @@ class GroupCommitLog(CommitPipeline):
             self.csn += 1
             buf = (encode_varint(CSN_TAG)
                    + encode_wal_record(b"", self.csn, 0, b"")) + buf
+        tracer = self.core.tracer if self.core is not None else None
+        t0 = self.device.clock.now
         self.device.append(self.active_fid, buf, cls)
+        if tracer is not None and cls == IOClass.WAL:
+            tracer.span("commit", "commit_round", t0, self.device.clock.now,
+                        {"records": n, "bytes": len(buf), "csn": self.csn})
         if cls == IOClass.WAL:
             self.syncs += 1
             self.records += n

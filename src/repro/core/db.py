@@ -18,6 +18,7 @@ from bisect import bisect_left
 from contextlib import contextmanager
 from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
 
+from ..obs import TraceRecorder
 from ..store.blockio import BlockCorruptionError
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
 from ..store.format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF, VT_VALUE,
@@ -159,15 +160,37 @@ class KVStore:
             self.sink.csn = max(self.sink.csn, self.versions.csn)
         self.immutables: List[Tuple[Memtable, MemtableLog]] = []
         self._readers: Dict[int, object] = {}
-        self.stats_counters: Dict[str, float] = {
-            "puts": 0, "gets": 0, "deletes": 0, "scans": 0, "flushes": 0,
-            "compactions": 0, "gc_runs": 0, "stall_time_s": 0.0,
-            "slowdown_time_s": 0.0, "forced_gc": 0, "cap_breaches": 0,
-            "snapshots": 0, "rmw_ops": 0, "rmw_conflicts": 0,
-            "cas_ops": 0, "cas_failures": 0,
-        }
-        self.gc_step_time: Dict[str, float] = {c.value: 0.0
-                                               for c in GC_STEP_CLASSES}
+        # Observability: counters are registry groups on the shared
+        # device (plain dicts at runtime — the hot-path ``+=`` is
+        # unchanged — but named, snapshot-able, and monotonic across a
+        # crash/recovery cycle that reuses the device).  stall_time_s
+        # stays the aggregate; the stall_*_s keys attribute it by cause
+        # (admission stalls split from write-controller slowdowns,
+        # which in turn are distinct from the wall-clock commit-pipeline
+        # waits counted in "wall/commit_pipeline").
+        self.obs = self.device.metrics
+        self.stats_counters: Dict[str, float] = self.obs.counters(
+            f"shard{shard_tag}/counters", {
+                "puts": 0, "gets": 0, "deletes": 0, "scans": 0, "flushes": 0,
+                "compactions": 0, "gc_runs": 0, "stall_time_s": 0.0,
+                "stall_memtable_s": 0.0, "stall_l0_s": 0.0,
+                "stall_space_s": 0.0, "slowdown_time_s": 0.0,
+                "forced_gc": 0, "cap_breaches": 0,
+                "snapshots": 0, "rmw_ops": 0, "rmw_conflicts": 0,
+                "cas_ops": 0, "cas_failures": 0,
+            })
+        self.gc_step_time: Dict[str, float] = self.obs.counters(
+            f"shard{shard_tag}/gc_step_time",
+            {c.value: 0.0 for c in GC_STEP_CLASSES})
+        if opts.obs_sampling:
+            self.obs.sampling = True
+        self._lat = {op: self.obs.histogram(f"shard{shard_tag}/latency/{op}")
+                     for op in ("put", "get", "delete", "scan")}
+        # Amplification ledger: this store contributes its version-set
+        # space components and its foreground logical bytes; re-attach
+        # under the same tag after recovery replaces the stale store.
+        self.obs.ledger.attach(shard_tag, self)
+        self.placement.on_retune = self._trace_retune
         self._ops_since_sched = 0
         self._gc_check_pending = False
         # optional instrumentation hook: called with (ukey, vtype, payload)
@@ -192,13 +215,19 @@ class KVStore:
 
     def put(self, ukey: bytes, value: bytes) -> None:
         with self._fg():
+            t0 = self.clock.now if self.obs.sampling else None
             self._write(ukey, VT_VALUE, value)
             self.stats_counters["puts"] += 1
+            if t0 is not None:
+                self._lat["put"].record(self.clock.now - t0)
 
     def delete(self, ukey: bytes) -> None:
         with self._fg():
+            t0 = self.clock.now if self.obs.sampling else None
             self._write(ukey, VT_DELETE, b"")
             self.stats_counters["deletes"] += 1
+            if t0 is not None:
+                self._lat["delete"].record(self.clock.now - t0)
 
     def write_batch(self, ops) -> None:
         """Apply ('put', k, v) / ('del', k) ops under one commit group on
@@ -264,6 +293,10 @@ class KVStore:
         self.sink.append(ukey, self.versions.seq, vtype, payload)
         self.mem.put(ukey, self.versions.seq, vtype, payload)
         self.device.charge_cpu()
+        # Amplification-ledger denominator: logical user bytes.
+        led = self.obs.ledger
+        led.user_bytes += len(ukey) + len(payload)
+        led.user_ops += 1
         if self.on_user_write is not None:
             self.on_user_write(ukey, vtype, payload)
         if self.mem.approx_bytes >= self.opts.memtable_bytes:
@@ -324,7 +357,15 @@ class KVStore:
                 # so workloads terminate.
                 self.stats_counters["cap_breaches"] += 1
                 return
-            self.stats_counters["stall_time_s"] += self.clock.now - t0
+            dt = self.clock.now - t0
+            self.stats_counters["stall_time_s"] += dt
+            # Attribute the admission stall to its cause (distinct from
+            # the soft write-controller slowdown counted above).
+            self.stats_counters[f"stall_{reason}_s"] += dt
+            tracer = self.sched.core.tracer
+            if tracer is not None and dt > 0.0:
+                tracer.complete(f"fg/shard{self.shard_tag}", "stall",
+                                t0, dt, {"reason": reason})
             guard += 1
             if guard > 100000:
                 raise RuntimeError("stall livelock")
@@ -433,8 +474,11 @@ class KVStore:
         with self._fg():
             self.sched.pump()
             self.stats_counters["gets"] += 1
+            t0 = self.clock.now if self.obs.sampling else None
             e = self.get_entry(ukey, IOClass.USER_READ,
                                self._snap_bound(snapshot))
+            if t0 is not None:
+                self._lat["get"].record(self.clock.now - t0)
             return e is not None and e[2] != VT_DELETE
 
     def get_present(self, ukey: bytes, *,
@@ -452,11 +496,14 @@ class KVStore:
         with self._fg():
             self.sched.pump()
             self.stats_counters["gets"] += 1
+            t0 = self.clock.now if self.obs.sampling else None
             e = self.get_entry(ukey, IOClass.USER_READ,
                                self._snap_bound(snapshot))
-            if e is None:
-                return False, None
-            return True, self._resolve_value(e, IOClass.USER_READ)
+            out = ((False, None) if e is None
+                   else (True, self._resolve_value(e, IOClass.USER_READ)))
+            if t0 is not None:
+                self._lat["get"].record(self.clock.now - t0)
+            return out
 
     # -- MVCC snapshots + conditional writes -----------------------------
 
@@ -645,6 +692,7 @@ class KVStore:
         with self._fg():
             self.sched.pump()
             self.stats_counters["scans"] += 1
+            t0 = self.clock.now if self.obs.sampling else None
             out: List[Tuple[bytes, bytes]] = []
             prev: Optional[bytes] = None
             # Scan-window admission: blocks touched only by this sweep
@@ -666,6 +714,8 @@ class KVStore:
                     out.append((e[0], val))
                     if len(out) >= count:
                         break
+            if t0 is not None:
+                self._lat["scan"].record(self.clock.now - t0)
             return out
 
     def _level_stream(self, files: List[FileMeta], start: bytes,
@@ -817,14 +867,17 @@ class KVStore:
                 break
             imm._flushing = True  # type: ignore[attr-defined]
             self.sched.run_job(JOB_FLUSH, lambda i=imm, h=handle:
-                               self._flush_body(i, h))
+                               self._flush_body(i, h),
+                               trace_args={"shard": self.shard_tag})
         # compaction
         while self.sched.can_admit(JOB_COMPACTION):
             plan = plan_compaction(self.versions, self.opts)
             if plan is None:
                 break
             self.sched.run_job(JOB_COMPACTION,
-                               lambda p=plan: execute_compaction(self, p))
+                               lambda p=plan: execute_compaction(self, p),
+                               trace_args={"shard": self.shard_tag,
+                                           "level": plan.level})
         # standalone GC.  Baselines (TerarkDB/Titan) evaluate the garbage
         # trigger only after a compaction completes (paper II-B); the
         # Scavenger+ dynamic scheduler re-evaluates continuously (III-D).
@@ -839,7 +892,10 @@ class KVStore:
                     if forced:
                         self.stats_counters["forced_gc"] += 1
                     self.sched.run_job(JOB_GC,
-                                       lambda v=victim: self._gc_body(v))
+                                       lambda v=victim: self._gc_body(v),
+                                       trace_args={"shard": self.shard_tag,
+                                                   "victim": victim.fid,
+                                                   "forced": forced})
         self._update_pressures()
 
     def _gc_body(self, victim: VSSTMeta):
@@ -986,6 +1042,9 @@ class KVStore:
             # Keep the cost model's tree-overhead term live (S_index is a
             # couple of list sums — cheap at this call rate).
             self.placement.note_tree(self.versions.s_index())
+        # Roll the amplification-ledger window if due (engine lock held
+        # here; a no-op comparison when it is not).
+        self.obs.ledger.maybe_sample(self.clock.now)
 
     def drain(self, max_sim_s: float = 1e9) -> None:
         """Let all in-flight background work complete (quiesce)."""
@@ -1024,6 +1083,56 @@ class KVStore:
     def stats(self) -> Dict[str, object]:
         with self.sched.core.engine_lock:
             return self._stats_locked()
+
+    # -- observability (repro.obs) ---------------------------------------
+
+    def metrics(self, *, sim_only: bool = False) -> Dict[str, object]:
+        """Full observability snapshot: registry counter groups and
+        histograms plus the amplification ledger (per-source write-amp,
+        per-component space-amp, windowed series).  ``sim_only`` drops
+        wall-clock-derived series so two seeded runs compare equal."""
+        with self.sched.core.engine_lock:
+            snap: Dict[str, object] = {"sim_time_s": self.clock.now}
+            snap["registry"] = self.obs.snapshot(sim_only=sim_only)
+            snap["amp"] = self.obs.ledger.snapshot()
+            return snap
+
+    def start_trace(self, recorder: Optional[TraceRecorder] = None
+                    ) -> TraceRecorder:
+        """Begin recording a Chrome trace (jobs, commit rounds, device
+        I/O, governor/placement decisions) on the simulated clock."""
+        if recorder is None:
+            recorder = TraceRecorder(self.clock)
+        with self.sched.core.engine_lock:
+            self.device.tracer = recorder
+            self.sched.core.tracer = recorder
+        return recorder
+
+    def stop_trace(self, path: Optional[str] = None
+                   ) -> Optional[TraceRecorder]:
+        with self.sched.core.engine_lock:
+            recorder = self.device.tracer
+            self.device.tracer = None
+            self.sched.core.tracer = None
+        if recorder is not None and path is not None:
+            recorder.dump(path)
+        return recorder
+
+    @contextmanager
+    def trace(self, path: Optional[str] = None):
+        """``with db.trace("out.json"): ...`` — record and dump a trace."""
+        recorder = self.start_trace()
+        try:
+            yield recorder
+        finally:
+            self.stop_trace(path)
+
+    def _trace_retune(self, threshold: int) -> None:
+        tracer = self.sched.core.tracer
+        if tracer is not None:
+            tracer.instant("placement", "retune",
+                           args={"shard": self.shard_tag,
+                                 "threshold": threshold})
 
     def _stats_locked(self) -> Dict[str, object]:
         p_i, p_v = self.pressures()

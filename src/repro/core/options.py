@@ -136,6 +136,11 @@ class Options:
     # --- limits ----------------------------------------------------------
     space_cap_bytes: Optional[int] = None   # paper's "1.5x space limit"
 
+    # --- observability (repro.obs) ---------------------------------------
+    obs_sampling: bool = False        # latency histograms on foreground ops
+    obs_window_s: float = 0.5         # amplification-ledger window (sim s)
+    obs_series_len: int = 256         # ledger ring-buffer length
+
     def validate(self) -> "Options":
         assert self.index_kind in ("ka", "kf")
         assert self.vsst_format in ("log", "btable", "rtable")
@@ -156,6 +161,8 @@ class Options:
         if self.bloom_bits_per_key is None:
             self.bloom_bits_per_key = self.bits_per_key
         assert self.bloom_bits_per_key >= 0
+        assert self.obs_window_s > 0.0
+        assert self.obs_series_len >= 1
         if self.index_kind == "ka":
             assert self.vsst_format == "log", "KA addressing implies log vSSTs"
         return self

@@ -206,6 +206,10 @@ class PlacementEngine:
         # the vSST wasted-probe rate prices negative-lookup hops, which
         # per-table filters drive to ~0.
         self.blockio_source = None
+        # Observability hook (set by KVStore): called with the new
+        # effective threshold after each completed retune, so an active
+        # TraceRecorder can mark the decision as an instant event.
+        self.on_retune = None
         self.threshold = opts.sep_threshold
         self.counters: Dict[str, int] = {
             "inline_records": 0, "separated_records": 0,
@@ -426,6 +430,8 @@ class PlacementEngine:
         self.churn.decay()
         self.reads.decay()
         self.absorbed.decay()
+        if self.on_retune is not None:
+            self.on_retune(self.threshold)
 
     # -- reporting ---------------------------------------------------------
     def stats(self) -> Dict[str, object]:

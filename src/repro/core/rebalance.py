@@ -143,12 +143,16 @@ class Rebalancer:
         # does the routing flip) that keeps the target's stale copy from
         # resurrecting the key.
         self.window_deletes: Dict[int, set] = {}  # slot -> {key}
-        self.counters: Dict[str, int] = {
-            "proposals": 0, "migrations": 0, "slots_moved": 0,
-            "keys_moved": 0, "bytes_moved": 0, "catchup_keys": 0,
-            "window_deletes": 0, "keys_cleaned": 0, "cleanups": 0,
-            "aborted_cleanups": 0, "deferred_commits": 0,
-        }
+        # Registry-backed (a plain dict at runtime): monotonic across a
+        # crash/recovery cycle that reuses the device, like shard
+        # counters.
+        self.counters: Dict[str, int] = store.device.metrics.counters(
+            "rebalance", {
+                "proposals": 0, "migrations": 0, "slots_moved": 0,
+                "keys_moved": 0, "bytes_moved": 0, "catchup_keys": 0,
+                "window_deletes": 0, "keys_cleaned": 0, "cleanups": 0,
+                "aborted_cleanups": 0, "deferred_commits": 0,
+            })
 
     # -- load accounting -------------------------------------------------
     # Two views per slot: cumulative write bytes (the write-rate signal)
@@ -334,8 +338,14 @@ class Rebalancer:
             with self._acct_mu:
                 self.window_deletes[slot] = set()
             self.counters["migrations"] += 1
+            tracer = store.sched_core.tracer
+            if tracer is not None:
+                tracer.instant("rebalance", "migrate_start",
+                               args={"slot": slot, "src": src_id,
+                                     "dst": dst_id})
             store.sched.run_job(
-                JOB_MIGRATE, lambda: self._migrate_body(slot, src_id, dst_id))
+                JOB_MIGRATE, lambda: self._migrate_body(slot, src_id, dst_id),
+                trace_args={"slot": slot, "src": src_id, "dst": dst_id})
             return True
 
     def _migrate_body(self, slot: int, src_id: int, dst_id: int):
@@ -477,6 +487,10 @@ class Rebalancer:
         store.slot_map = new_map
         self.inflight.pop(slot, None)
         self.counters["slots_moved"] += 1
+        tracer = store.sched_core.tracer
+        if tracer is not None:
+            tracer.instant("rebalance", "epoch_commit",
+                           args={"slot": slot, "epoch": store.epoch})
         # GC-riding cleanup: tombstone the moved keys on the source so
         # compaction drops the shadowed entries (hidden → exposed garbage)
         # and standalone GC reclaims the value bytes.

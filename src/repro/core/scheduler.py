@@ -89,12 +89,14 @@ class Lanes:
     def busy_count(self, now: float) -> int:
         return sum(1 for t in self.free_at if t > now)
 
-    def schedule(self, now: float, duration: float) -> float:
+    def schedule(self, now: float, duration: float) -> Tuple[int, float, float]:
+        """Place ``duration`` on the earliest-free lane; returns
+        ``(lane, start, end)`` so callers can attribute the span."""
         i = self.earliest()
         start = max(now, self.free_at[i])
         end = start + duration
         self.free_at[i] = end
-        return end
+        return i, start, end
 
 
 class SchedulerCore:
@@ -136,13 +138,18 @@ class SchedulerCore:
         self._win_flush_bytes = 0
         self._win_write_bytes = 0
         self._win_flush_time = 0.0
-        self.throttle_events = 0
+        # Observability: an active TraceRecorder (set by Store.trace())
+        # sees job spans, commit rounds and governor decisions.
+        self.tracer = None
+        # Monotonic core counters live in the device's metrics registry
+        # so a crash/recovery cycle on the same device keeps them.
         # WAL commit accounting: a group commit is *one* charged sync
         # however many records it coalesces, and that is what the
         # bandwidth governor's write window sees (not N appends).
-        self.wal_syncs = 0
-        self.wal_records = 0
-        self.wal_bytes = 0
+        self._wal = device.metrics.counters(
+            "core/wal", {"syncs": 0, "records": 0, "bytes": 0})
+        self._gov = device.metrics.counters(
+            "core/governor", {"throttle_events": 0, "recoveries": 0})
         # Cumulative background write bytes per job kind (flush = every
         # byte the flush job wrote, kSSTs and vSSTs alike).  Unlike the
         # per-class device stats these are attributed by the *job* that
@@ -150,8 +157,26 @@ class SchedulerCore:
         # background volume directly — and for a sharded store they
         # aggregate across every member of the core.  (The placement cost
         # model keeps its own per-store, index-only flush counter.)
-        self.bg_write_bytes: Dict[str, int] = {
-            JOB_FLUSH: 0, JOB_COMPACTION: 0, JOB_GC: 0, JOB_MIGRATE: 0}
+        self.bg_write_bytes: Dict[str, int] = device.metrics.counters(
+            "core/bg_write_bytes",
+            {JOB_FLUSH: 0, JOB_COMPACTION: 0, JOB_GC: 0, JOB_MIGRATE: 0})
+
+    # Legacy attribute names for the registry-backed counters.
+    @property
+    def wal_syncs(self) -> int:
+        return self._wal["syncs"]
+
+    @property
+    def wal_records(self) -> int:
+        return self._wal["records"]
+
+    @property
+    def wal_bytes(self) -> int:
+        return self._wal["bytes"]
+
+    @property
+    def throttle_events(self) -> int:
+        return self._gov["throttle_events"]
 
     # -- event pump ------------------------------------------------------
     def push_event(self, when: float, fn: Callable[[], None]) -> None:
@@ -251,9 +276,9 @@ class SchedulerCore:
     def note_wal_sync(self, nbytes: int, nrecords: int = 1) -> None:
         """Record one durable WAL sync covering ``nrecords`` records."""
         with self.engine_lock:
-            self.wal_syncs += 1
-            self.wal_records += nrecords
-            self.wal_bytes += nbytes
+            self._wal["syncs"] += 1
+            self._wal["records"] += nrecords
+            self._wal["bytes"] += nbytes
             self.note_write(nbytes)
 
     def note_bg_write(self, kind: str, nbytes: int) -> None:
@@ -290,17 +315,30 @@ class SchedulerCore:
                 self._flush_bw_avg = 0.8 * self._flush_bw_avg + 0.2 * flush_bw
         degraded = (flush_bw is not None and self._flush_bw_avg is not None
                     and flush_bw < 0.8 * self._flush_bw_avg)
+        prev_frac = self.gc_write_limiter.fraction
         if write_util > 0.8 and degraded:
             self.gc_write_limiter.set_fraction(
                 self.gc_write_limiter.fraction - self.opts.rate_limit_step)
             self.gc_read_limiter.set_fraction(
                 self.gc_read_limiter.fraction - self.opts.rate_limit_step)
-            self.throttle_events += 1
+            self._gov["throttle_events"] += 1
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "governor", "throttle", now,
+                    {"gc_bw_fraction": round(self.gc_write_limiter.fraction, 4),
+                     "write_util": round(write_util, 4)})
         else:
             self.gc_write_limiter.set_fraction(
                 min(1.0, self.gc_write_limiter.fraction + 0.05))
             self.gc_read_limiter.set_fraction(
                 min(1.0, self.gc_read_limiter.fraction + 0.05))
+            if self.gc_write_limiter.fraction > prev_frac:
+                self._gov["recoveries"] += 1
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "governor", "recover", now,
+                        {"gc_bw_fraction":
+                         round(self.gc_write_limiter.fraction, 4)})
         self._win_start = now
         self._win_flush_bytes = 0
         self._win_write_bytes = 0
@@ -322,7 +360,7 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def run_job(self, kind: str, body: Callable[[], Callable[[], None]],
-                ) -> float:
+                trace_args: Optional[Dict[str, object]] = None) -> float:
         """Execute ``body`` now (real work, time into a JobClock), schedule
         its returned effects at lane completion time.  Returns end time.
 
@@ -335,8 +373,12 @@ class Scheduler:
             with JobClock(self.device) as jc:
                 effects = body()
             lanes = core.flush_lanes if kind == JOB_FLUSH else core.bg_lanes
-            end = lanes.schedule(self.clock.now, jc.elapsed)
+            lane, start, end = lanes.schedule(self.clock.now, jc.elapsed)
             elapsed = jc.elapsed
+            if core.tracer is not None:
+                track = (f"flush-lane-{lane}" if kind == JOB_FLUSH
+                         else f"bg-lane-{lane}")
+                core.tracer.span(track, kind, start, end, trace_args)
 
             def _complete() -> None:
                 core.active[kind] -= 1

@@ -63,6 +63,7 @@ from typing import (Callable, Dict, Iterable, List, Optional,
 
 import msgpack
 
+from ..obs import TraceRecorder
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
 from ..store.format import VT_DELETE, VT_VALUE
 from .cache import SharedReadCache
@@ -163,6 +164,13 @@ class ShardedKVStore:
                  "manifests": [s.versions.manifest_fid
                                for s in self.shards]})
         self.n_shards = n_shards
+        # Observability: registry + ledger shared with the shards via the
+        # device; the cache's adaptive quota retunes show up as trace
+        # instant events when a recorder is active.
+        self.obs = self.device.metrics
+        if opts.obs_sampling:
+            self.obs.sampling = True
+        self.cache.on_retune = self._trace_cache_retune
         self.rebalancer = Rebalancer(self)
         if pending_cleanup is not None:
             # A move committed but crashed before tombstoning the source
@@ -798,6 +806,53 @@ class ShardedKVStore:
             "per_shard_counters": [dict(s.stats_counters)
                                    for s in self.shards],
         }
+
+    # -- observability (repro.obs) ---------------------------------------
+
+    def metrics(self, *, sim_only: bool = False) -> Dict[str, object]:
+        """Registry + amplification-ledger snapshot for the whole store
+        (shards share the device's registry, so one call covers them).
+        ``sim_only`` drops wall-clock-derived series so two seeded runs
+        compare equal."""
+        with self.sched_core.engine_lock:
+            snap: Dict[str, object] = {"sim_time_s": self.clock.now}
+            snap["registry"] = self.obs.snapshot(sim_only=sim_only)
+            snap["amp"] = self.obs.ledger.snapshot()
+            return snap
+
+    def start_trace(self, recorder: Optional[TraceRecorder] = None
+                    ) -> TraceRecorder:
+        if recorder is None:
+            recorder = TraceRecorder(self.clock)
+        with self.sched_core.engine_lock:
+            self.device.tracer = recorder
+            self.sched_core.tracer = recorder
+        return recorder
+
+    def stop_trace(self, path: Optional[str] = None
+                   ) -> Optional[TraceRecorder]:
+        with self.sched_core.engine_lock:
+            recorder = self.device.tracer
+            self.device.tracer = None
+            self.sched_core.tracer = None
+        if recorder is not None and path is not None:
+            recorder.dump(path)
+        return recorder
+
+    @contextmanager
+    def trace(self, path: Optional[str] = None):
+        """``with db.trace("out.json"): ...`` — record and dump a trace."""
+        recorder = self.start_trace()
+        try:
+            yield recorder
+        finally:
+            self.stop_trace(path)
+
+    def _trace_cache_retune(self, quotas: List[int]) -> None:
+        tracer = self.sched_core.tracer
+        if tracer is not None:
+            tracer.instant("cache", "quota_retune",
+                           args={"quotas": quotas})
 
 
 def _s_index(level_sizes: List[int]) -> float:

@@ -1,0 +1,37 @@
+"""Unified observability layer.
+
+Four pieces (see ROADMAP "Observability"):
+
+* :class:`MetricsRegistry` — typed counter groups and log-bucketed
+  latency histograms behind a hierarchical, per-shard-labeled
+  namespace.  The engines' ``stats_counters`` dicts are *views* onto
+  registry groups, so the legacy ``stats()`` keys keep working while
+  every counter survives a crash/recovery cycle (the registry lives on
+  the shared :class:`~repro.store.device.BlockDevice`).
+* :class:`AmplificationLedger` — write-amp by source (WAL, flush,
+  compaction, GC rewrite, migration copy) and space-amp by component
+  (index LSM, live values, dead garbage, filter overhead), with a
+  windowed time series sampled on the simulated clock.
+* :class:`TraceRecorder` — Chrome trace-event JSON (Perfetto-loadable):
+  background jobs as duration spans on per-lane tracks, commit-group
+  rounds, device I/O by ``IOClass``, governor / placement-retune /
+  rebalancer decisions as instant events.
+* CLIs — ``python -m repro.obs.report`` (text dashboard from a metrics
+  snapshot) and ``python -m repro.obs.lint`` (trace validity lint).
+
+This package is dependency-free within the repo: ``repro.store`` and
+``repro.core`` import *it*, never the other way round.
+"""
+
+from .ledger import AmplificationLedger
+from .registry import CounterGroup, Histogram, MetricsRegistry
+from .trace import TraceRecorder, lint_events
+
+__all__ = [
+    "AmplificationLedger",
+    "CounterGroup",
+    "Histogram",
+    "MetricsRegistry",
+    "TraceRecorder",
+    "lint_events",
+]

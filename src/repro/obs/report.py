@@ -1,0 +1,88 @@
+"""Text dashboard CLI: ``python -m repro.obs.report metrics.json``.
+
+Accepts either a single ``Store.metrics()`` snapshot or the
+``{label: snapshot, ...}`` mapping written by
+``benchmarks/run.py --metrics-json=``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024.0 or unit == "TB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024.0
+    return f"{n:.1f}TB"
+
+
+def _fmt_us(s: float) -> str:
+    return f"{s * 1e6:.1f}us"
+
+
+def render(snap: Dict, out=sys.stdout) -> None:
+    w = out.write
+    amp = snap.get("amp") or {}
+    if amp:
+        w(f"  user writes: {_fmt_bytes(amp.get('user_bytes', 0))} "
+          f"({amp.get('user_ops', 0)} ops)\n")
+        w(f"  write-amp by source (total {amp.get('wa_total', 0.0):.2f}x):\n")
+        wb = amp.get("write_bytes", {})
+        for src, ratio in sorted(amp.get("wa_by_source", {}).items()):
+            w(f"    {src:<11} {_fmt_bytes(wb.get(src, 0)):>10}  "
+              f"{ratio:6.2f}x\n")
+        w(f"  space by component (amp {amp.get('sa_total', 0.0):.2f}x):\n")
+        comps = amp.get("space", {})
+        for k in ("index_bytes", "value_live_bytes", "value_garbage_bytes",
+                  "filter_bytes", "other_bytes", "device_total_bytes"):
+            if k in comps:
+                w(f"    {k:<21} {_fmt_bytes(comps[k]):>10}\n")
+        series = amp.get("series") or []
+        if series:
+            w(f"  ledger windows: {len(series)} "
+              f"(last at t={series[-1]['t']:.3f}s)\n")
+    reg = snap.get("registry") or {}
+    hists = reg.get("histograms", {})
+    live = {n: h for n, h in hists.items() if h.get("count")}
+    if live:
+        w("  latency histograms (p50 / p95 / p99, n):\n")
+        for name in sorted(live):
+            h = live[name]
+            w(f"    {name:<28} {_fmt_us(h['p50']):>9} {_fmt_us(h['p95']):>9}"
+              f" {_fmt_us(h['p99']):>9}  n={h['count']}\n")
+    groups = reg.get("counters", {})
+    if groups:
+        w("  counters:\n")
+        for gname in sorted(groups):
+            nonzero = {k: v for k, v in groups[gname].items() if v}
+            if not nonzero:
+                continue
+            body = ", ".join(
+                f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in sorted(nonzero.items()))
+            w(f"    {gname}: {body}\n")
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: python -m repro.obs.report METRICS.json",
+              file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        doc = json.load(f)
+    # A single snapshot has "registry"/"amp" at top level; a bench dump
+    # maps labels to snapshots.
+    if "registry" in doc or "amp" in doc:
+        doc = {"snapshot": doc}
+    for label, snap in doc.items():
+        print(f"== {label} (sim t={snap.get('sim_time_s', 0.0):.3f}s) ==")
+        render(snap)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

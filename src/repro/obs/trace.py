@@ -1,0 +1,163 @@
+"""Chrome trace-event recording and validation.
+
+:class:`TraceRecorder` emits the JSON Array / ``traceEvents`` format
+understood by Perfetto and ``chrome://tracing``:
+
+* ``B``/``E`` duration spans — background jobs on per-lane tracks,
+  commit-group rounds on the ``commit`` track, foreground stalls;
+* ``X`` complete events — device I/O by ``IOClass`` (emitted with an
+  explicit ``dur`` because simulated time may not advance between the
+  begin and end of an enclosing job body);
+* ``i`` instant events — GC-governor bandwidth decisions, placement
+  retunes, rebalancer migration lifecycle;
+* ``M`` metadata — process/thread names for the track labels.
+
+Timestamps are the shared *simulated* clock in microseconds, so two
+seeded runs produce identical event sequences.  Tracks ("threads") are
+allocated deterministically in first-use order.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Tuple
+
+
+class TraceRecorder:
+    def __init__(self, clock=None, pid: int = 1,
+                 process_name: str = "repro") -> None:
+        self.clock = clock
+        self.pid = pid
+        self.events: List[dict] = []
+        self._meta: List[dict] = [{
+            "ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+            "args": {"name": process_name},
+        }]
+        self._tids: Dict[str, int] = {}
+
+    def _tid(self, track: str) -> int:
+        tid = self._tids.get(track)
+        if tid is None:
+            tid = len(self._tids) + 1
+            self._tids[track] = tid
+            self._meta.append({
+                "ph": "M", "name": "thread_name", "pid": self.pid,
+                "tid": tid, "args": {"name": track},
+            })
+        return tid
+
+    def _ts(self, ts: Optional[float]) -> float:
+        if ts is None:
+            ts = self.clock.now if self.clock is not None else 0.0
+        return round(ts * 1e6, 3)
+
+    # -- emitters (ts arguments are simulated seconds) ----------------
+    def begin(self, track: str, name: str, ts: Optional[float] = None,
+              args: Optional[dict] = None) -> None:
+        ev = {"ph": "B", "name": name, "pid": self.pid,
+              "tid": self._tid(track), "ts": self._ts(ts)}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def end(self, track: str, name: str, ts: Optional[float] = None) -> None:
+        self.events.append({"ph": "E", "name": name, "pid": self.pid,
+                            "tid": self._tid(track), "ts": self._ts(ts)})
+
+    def span(self, track: str, name: str, t0: float, t1: float,
+             args: Optional[dict] = None) -> None:
+        """A ``B``/``E`` pair with both endpoints known up front."""
+        self.begin(track, name, t0, args)
+        self.end(track, name, t1)
+
+    def complete(self, track: str, name: str, t0: float, dur_s: float,
+                 args: Optional[dict] = None) -> None:
+        ev = {"ph": "X", "name": name, "pid": self.pid,
+              "tid": self._tid(track), "ts": self._ts(t0),
+              "dur": round(dur_s * 1e6, 3)}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def instant(self, track: str, name: str, ts: Optional[float] = None,
+                args: Optional[dict] = None) -> None:
+        ev = {"ph": "i", "s": "t", "name": name, "pid": self.pid,
+              "tid": self._tid(track), "ts": self._ts(ts)}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    # -- output -------------------------------------------------------
+    def sorted_events(self) -> List[dict]:
+        """Metadata first, then events stable-sorted by timestamp.
+
+        Stability matters: a span's ``E`` and the next span's ``B`` on
+        one track may share a timestamp, and emission order (E before
+        B) is what keeps the pairs balanced for the lint.
+        """
+        return self._meta + sorted(self.events, key=lambda e: e["ts"])
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"traceEvents": self.sorted_events()}, f)
+
+
+def lint_events(events: List[dict]) -> List[str]:
+    """Validate a Chrome trace-event list; return a list of problems.
+
+    Checks: required fields per phase, non-negative numeric timestamps,
+    per-track (pid, tid) timestamp monotonicity, ``X`` durations >= 0,
+    and balanced, properly nested ``B``/``E`` pairs per track.
+    """
+    errors: List[str] = []
+    last_ts: Dict[Tuple[int, int], float] = {}
+    stacks: Dict[Tuple[int, int], List[str]] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph is None:
+            errors.append(f"event {i}: missing ph")
+            continue
+        if "pid" not in ev or "tid" not in ev:
+            errors.append(f"event {i}: missing pid/tid")
+            continue
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"event {i}: bad ts {ts!r}")
+            continue
+        key = (ev["pid"], ev["tid"])
+        prev = last_ts.get(key)
+        if prev is not None and ts < prev:
+            errors.append(f"event {i}: ts {ts} < {prev} on track {key}")
+        last_ts[key] = ts
+        if ph == "B":
+            stacks.setdefault(key, []).append(ev.get("name", ""))
+        elif ph == "E":
+            stack = stacks.setdefault(key, [])
+            if not stack:
+                errors.append(f"event {i}: E without B on track {key}")
+            else:
+                top = stack.pop()
+                name = ev.get("name")
+                if name is not None and name != top:
+                    errors.append(
+                        f"event {i}: E {name!r} does not match open "
+                        f"B {top!r} on track {key}")
+        elif ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"event {i}: X with bad dur {dur!r}")
+        elif ph not in ("i", "I", "C", "N", "O", "D"):
+            errors.append(f"event {i}: unknown phase {ph!r}")
+    for key, stack in stacks.items():
+        if stack:
+            errors.append(f"track {key}: {len(stack)} unclosed B "
+                          f"event(s), first {stack[0]!r}")
+    return errors
+
+
+__all__ = ["TraceRecorder", "lint_events"]

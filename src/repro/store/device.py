@@ -24,6 +24,7 @@ from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
 
+from ..obs.registry import MetricsRegistry
 from .blockio import BlockCodecStats
 
 
@@ -205,6 +206,11 @@ class BlockDevice:
         # live on the device like IOStats: every writer/reader already holds
         # the device, and a sharded store shares one set of counters.
         self.block_stats = BlockCodecStats()
+        # Observability: the metrics registry shares the device's
+        # lifetime (counters survive crash/recovery re-attachment), and
+        # an active TraceRecorder sees every charged I/O as an X event.
+        self.metrics = MetricsRegistry()
+        self.tracer = None
         self._files: Dict[int, bytearray] = {}
         self._next_id = 1
         self.gc_read_limiter: Optional[RateLimiter] = None
@@ -266,6 +272,10 @@ class BlockDevice:
             dt += self.gc_write_limiter.charge(len(data))
         self.stats.add(cls, len(data), dt)
         if self.charge_time:
+            if self.tracer is not None:
+                self.tracer.complete(f"io/{cls.name.lower()}", "write",
+                                     self.clock.now, dt,
+                                     {"bytes": len(data), "fid": fid})
             self.clock.advance(dt)
         return off
 
@@ -277,6 +287,10 @@ class BlockDevice:
             dt += self.gc_read_limiter.charge(len(data))
         self.stats.add(cls, len(data), dt)
         if self.charge_time:
+            if self.tracer is not None:
+                self.tracer.complete(f"io/{cls.name.lower()}", "read",
+                                     self.clock.now, dt,
+                                     {"bytes": len(data), "fid": fid})
             self.clock.advance(dt)
         return data
 

@@ -186,9 +186,12 @@ def test_aborted_migration_orphans_swept_at_recovery():
     assert db2.get(slot_keys[0]) is None
     _assert_state(db2, kv)
     # the abort marker is durable: a further recovery does not re-sweep
+    # (counters are registry-backed and monotonic across recovery, so
+    # "no re-sweep" shows as no increment, not a reset to zero)
+    before = db2.rebalancer.counters["aborted_cleanups"]
     db3 = ShardedKVStore(preset("scavenger_plus", num_slots=16),
                          device=device, recover=True)
-    assert db3.rebalancer.counters["aborted_cleanups"] == 0
+    assert db3.rebalancer.counters["aborted_cleanups"] == before
     _assert_state(db3, kv)
 
 
@@ -293,9 +296,11 @@ def test_crash_between_epoch_commit_and_cleanup():
         assert db2.shards[0].get(k) is None            # orphans tombstoned
     _assert_state(db2, kv)
     # the 'cleaned' frame is durable: a further recovery does not re-clean
+    # (monotonic registry counters: assert no increment, not a reset)
+    before = db2.rebalancer.counters["cleanups"]
     db3 = ShardedKVStore(preset("scavenger_plus", num_slots=16),
                          device=device, recover=True)
-    assert db3.rebalancer.counters["cleanups"] == 0
+    assert db3.rebalancer.counters["cleanups"] == before
     _assert_state(db3, kv)
 
 
