@@ -12,6 +12,12 @@ Prints ``name,us_per_call,derived`` CSV rows.  Selection:
 run's output as an artifact and the perf trajectory stays inspectable
 per-PR.
 
+Every suite that runs also drops a normalized ``BENCH_<suite>.json``
+trajectory record at the repo root (suite name, config hash, parsed
+per-row metrics, simulated and wall seconds) so successive runs of the
+same suite diff cleanly; CI uploads them as artifacts.  Disable with
+``REPRO_BENCH_RECORDS=0``.
+
 ``--metrics-json=PATH`` dumps each benchmark store's final
 ``Store.metrics()`` snapshot (registry + amplification ledger), keyed
 by system label; ``--trace=PATH`` records every store's job/commit/IO
@@ -47,10 +53,51 @@ Suites:
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import sys
 import time
+
+#: Bump when the BENCH_<suite>.json record layout changes.
+BENCH_SCHEMA = 1
+
+
+def _parse_row(row: str) -> dict:
+    """``name,us_per_call,derived`` CSV row -> typed record (derived may
+    itself contain commas, so split at most twice)."""
+    parts = row.split(",", 2)
+    name = parts[0]
+    try:
+        us = float(parts[1]) if len(parts) > 1 else 0.0
+    except ValueError:
+        us = 0.0
+    return {"name": name, "us_per_call": us,
+            "derived": parts[2] if len(parts) > 2 else ""}
+
+
+def write_bench_record(root: str, suite: str, rows, wall_s: float,
+                       sim_s: float, config: dict) -> str:
+    """Write the normalized ``BENCH_<suite>.json`` trajectory record and
+    return its path.  The config hash keys the record to the benchmark
+    configuration, so trajectory tooling never compares a FAST smoke run
+    against a full-size one."""
+    cfg_hash = hashlib.sha256(
+        json.dumps(config, sort_keys=True).encode()).hexdigest()[:12]
+    record = {
+        "schema": BENCH_SCHEMA,
+        "suite": suite,
+        "config": config,
+        "config_hash": cfg_hash,
+        "rows": [_parse_row(r) for r in rows],
+        "wall_seconds": round(wall_s, 3),
+        "sim_seconds": round(sim_s, 6),
+    }
+    path = os.path.join(root, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -95,12 +142,17 @@ def main() -> None:
         pass
     from repro.obs import runtime as obs_runtime
     obs_runtime.configure(trace=trace_path, metrics=metrics_path)
+    records_on = os.environ.get("REPRO_BENCH_RECORDS", "1") != "0"
+    bench_config = {"fast": bool(os.environ.get("REPRO_BENCH_FAST")),
+                    "schema": BENCH_SCHEMA}
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     print("name,us_per_call,derived")
     report = {}
     for name, fn in suites.items():
         if which and name not in which:
             continue
         t0 = time.time()
+        obs_runtime.take_sim_time()  # reset the per-suite accumulator
         rows = []
         try:
             for row in fn():
@@ -112,6 +164,11 @@ def main() -> None:
             print(err, flush=True)
         dt = time.time() - t0
         report[name] = {"rows": rows, "seconds": round(dt, 3)}
+        if records_on:
+            p = write_bench_record(repo_root, name, rows, dt,
+                                   obs_runtime.take_sim_time(),
+                                   bench_config)
+            print(f"# wrote {p}", file=sys.stderr, flush=True)
         print(f"# suite {name} done in {dt:.0f}s",
               file=sys.stderr, flush=True)
     if json_path:

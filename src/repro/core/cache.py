@@ -68,6 +68,11 @@ _READMIT_CAP = 512
 class SharedReadCache:
     """Device-wide block cache shared by ``n_shards`` tenants."""
 
+    #: Causal tracer hook (set by the owning store): misses land on the
+    #: current sampled op's chain, so an exemplar can show the
+    #: miss -> device-hop sequence behind a slow read.
+    causal = None
+
     def __init__(self, capacity_bytes: int, n_shards: int = 1,
                  high_ratio: float = 0.5, adaptive: bool = False,
                  ghost_ratio: float = 1.0, quota_floor: float = 0.05,
@@ -167,6 +172,8 @@ class SharedReadCache:
                     self._w_hits[sid] += 1
                     return v[0]
             self.misses[sid] += 1
+            if self.causal is not None:
+                self.causal.note_cache_miss(sid)
             if self.adaptive and not scanning:
                 sz = self._ghost[sid].pop(key, None)
                 if sz is not None:

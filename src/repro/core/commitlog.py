@@ -138,6 +138,22 @@ class CommitPipeline:
         self._wallc = (core.device.metrics.counters(
             "wall/commit_pipeline", {"wait_s": 0.0, "waits": 0})
             if core is not None else None)
+        # Commit-wait distribution, also wall-clock-derived and therefore
+        # wall/-prefixed: sim-only snapshots must exclude it or two
+        # same-seed threaded runs diverge.
+        self._wallh = (core.device.metrics.histogram("wall/commit_wait")
+                       if core is not None else None)
+
+    def _note_wait(self, waited: float) -> None:
+        """Account wall-clock time spent parked on the commit condition
+        (caller holds ``_qmu``)."""
+        if not waited:
+            return
+        if self._wallc is not None:
+            self._wallc["wait_s"] += waited
+            self._wallc["waits"] += 1
+        if self._wallh is not None and self.core.device.metrics.sampling:
+            self._wallh.record(waited)
 
     def _drain_write(self, recs: List[bytes], n: int) -> None:
         raise NotImplementedError
@@ -204,9 +220,7 @@ class CommitPipeline:
             waited = 0.0
             while True:
                 if self._durable >= self._tls.ticket:
-                    if waited and self._wallc is not None:
-                        self._wallc["wait_s"] += waited
-                        self._wallc["waits"] += 1
+                    self._note_wait(waited)
                     return               # someone else's sync covered us
                 if not self._leader_active:
                     self._leader_active = True
@@ -214,9 +228,7 @@ class CommitPipeline:
                 t0 = time.perf_counter()
                 self._qcond.wait()       # follower: leader will publish
                 waited += time.perf_counter() - t0
-            if waited and self._wallc is not None:
-                self._wallc["wait_s"] += waited
-                self._wallc["waits"] += 1
+            self._note_wait(waited)
             # Leader linger: while other groups are still open their
             # records are still arriving; wait so they ride this sync
             # (batch N's append overlaps batch N+1's memtable apply).
@@ -282,6 +294,7 @@ class SoloCommitSink(CommitPipeline):
                 self.csn += 1       # a write-through append is its own round
                 if self.core is not None:
                     self.core.note_wal_sync(nbytes, 1)
+                self.device.metrics.causal.commit_round(self.csn, 1, nbytes)
 
     def _drain_write(self, recs: List[bytes], n: int) -> None:
         buf = b"".join(recs)
@@ -294,6 +307,7 @@ class SoloCommitSink(CommitPipeline):
                         {"records": n, "bytes": len(buf), "csn": self.csn})
         if self.core is not None:
             self.core.note_wal_sync(len(buf), n)
+        self.device.metrics.causal.commit_round(self.csn, n, len(buf))
 
     def rotate(self) -> MemtableLog:
         with self._engine:
@@ -383,6 +397,7 @@ class GroupCommitLog(CommitPipeline):
             self.bytes += len(buf)
             if self.core is not None:
                 self.core.note_wal_sync(len(buf), n)
+            self.device.metrics.causal.commit_round(self.csn, n, len(buf))
 
     # -- segment lifecycle ----------------------------------------------
     def retain(self, fid: int) -> None:

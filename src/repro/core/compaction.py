@@ -23,7 +23,6 @@ from ..store.format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF, VT_VALUE,
                             decode_ka, encode_ka, encode_kf,
                             entry_value_size, entry_vsst)
 from ..store.tables import Entry, KTableWriter, LogTableWriter
-from .scheduler import JOB_COMPACTION
 from .version import FileMeta, VersionSet
 
 
@@ -311,9 +310,6 @@ def execute_compaction(db, plan: CompactionPlan) -> Callable[[], None]:
             db.drop_table(fid)
         tree_bytes = sum(props["file_size"] for _, props in outputs)
         db.placement.note_compaction(tree_bytes)
-        db.sched.note_bg_write(
-            JOB_COMPACTION,
-            tree_bytes + sum(m.file_size for m in new_blob_metas))
         db.stats_counters["compactions"] += 1
         db._gc_check_pending = True     # TerarkDB: GC trigger re-evaluated
         db.after_background()           # after each compaction (II-B)

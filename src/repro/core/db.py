@@ -18,7 +18,7 @@ from bisect import bisect_left
 from contextlib import contextmanager
 from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
 
-from ..obs import TraceRecorder
+from ..obs import AuditReport, TraceRecorder, audit_snapshot
 from ..store.blockio import BlockCorruptionError
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
 from ..store.format import (VT_DELETE, VT_INDEX_KA, VT_INDEX_KF, VT_VALUE,
@@ -184,6 +184,12 @@ class KVStore:
             {c.value: 0.0 for c in GC_STEP_CLASSES})
         if opts.obs_sampling:
             self.obs.sampling = True
+        # Causal tracing rides the same sampling gate: sampled ops get an
+        # OpContext that decomposes their latency into named shares and
+        # records an exemplar with the causal chain (commit round,
+        # blocking job, device hops) on the latency histogram bucket.
+        self.obs.causal.sample_every = opts.obs_sample_every
+        self.cache.core.causal = self.obs.causal
         self._lat = {op: self.obs.histogram(f"shard{shard_tag}/latency/{op}")
                      for op in ("put", "get", "delete", "scan")}
         # Amplification ledger: this store contributes its version-set
@@ -216,18 +222,46 @@ class KVStore:
     def put(self, ukey: bytes, value: bytes) -> None:
         with self._fg():
             t0 = self.clock.now if self.obs.sampling else None
+            ctx = (self.obs.causal.start("put", self.shard_tag)
+                   if t0 is not None else None)
             self._write(ukey, VT_VALUE, value)
             self.stats_counters["puts"] += 1
             if t0 is not None:
-                self._lat["put"].record(self.clock.now - t0)
+                lat = self.clock.now - t0
+                self._lat["put"].record(lat)
+                if ctx is not None:
+                    self._finish_ctx(ctx, "put", lat, t0)
 
     def delete(self, ukey: bytes) -> None:
         with self._fg():
             t0 = self.clock.now if self.obs.sampling else None
+            ctx = (self.obs.causal.start("delete", self.shard_tag)
+                   if t0 is not None else None)
             self._write(ukey, VT_DELETE, b"")
             self.stats_counters["deletes"] += 1
             if t0 is not None:
-                self._lat["delete"].record(self.clock.now - t0)
+                lat = self.clock.now - t0
+                self._lat["delete"].record(lat)
+                if ctx is not None:
+                    self._finish_ctx(ctx, "delete", lat, t0)
+
+    def _in_commit_group(self) -> bool:
+        """Is the calling thread inside an open commit group on this
+        store's sink?  Sampled writes finishing in-group defer their
+        exemplar until the group's WAL round publishes, so the record can
+        carry the round's CSN and the op's leader/follower role."""
+        log = getattr(self.sink, "log", None)
+        return (log if log is not None else self.sink).in_group
+
+    def _finish_ctx(self, ctx, op: str, lat: float, t0: float) -> None:
+        """Close a sampled op's causal context: attribute the residual,
+        store (or park, when still inside a commit group) the exemplar on
+        the op's latency-histogram bucket, and emit the request-track
+        span the flow arrows terminate on."""
+        self.obs.causal.finish(
+            ctx, self._lat[op].name, lat,
+            defer=self._in_commit_group(),
+            tracer=self.sched.core.tracer, t0=t0)
 
     def write_batch(self, ops) -> None:
         """Apply ('put', k, v) / ('del', k) ops under one commit group on
@@ -340,18 +374,30 @@ class KVStore:
         return None
 
     def _maybe_stall(self) -> None:
+        causal = self.obs.causal
         # slowdown band first (RocksDB-style soft delay)
         if len(self.versions.levels[0]) >= self.opts.l0_slowdown:
             self.clock.advance(100e-6)
             self.stats_counters["slowdown_time_s"] += 100e-6
+            causal.charge_named("slowdown", 100e-6)
         guard = 0
+        core = self.sched.core
         while True:
             reason = self._stall_reason()
             if reason is None:
                 return
             self.maybe_schedule_background(stalled_for=reason)
             t0 = self.clock.now
-            if not self.sched.wait_for_event():
+            # Whatever job completes during the wait is the stall's
+            # proximate cause — clear the marker so a completion from a
+            # previous wait can't be mis-blamed.
+            core.last_completed = None
+            # The whole wait is one stall share: absorb mode swallows the
+            # per-I/O charges of the effects pumped inside it (they would
+            # double-count against the stall_<reason> share below).
+            with causal.absorb():
+                relieved = self.sched.wait_for_event()
+            if not relieved:
                 # Nothing in flight can relieve the stall (e.g. cap set
                 # below working-set size) — record the breach and proceed
                 # so workloads terminate.
@@ -362,10 +408,26 @@ class KVStore:
             # Attribute the admission stall to its cause (distinct from
             # the soft write-controller slowdown counted above).
             self.stats_counters[f"stall_{reason}_s"] += dt
-            tracer = self.sched.core.tracer
+            blk = core.last_completed
+            causal.charge_stall(reason, dt,
+                                by_kind=blk[0] if blk else None,
+                                by_job=blk[1] if blk else None)
+            tracer = core.tracer
             if tracer is not None and dt > 0.0:
+                args = {"reason": reason}
+                if blk is not None:
+                    args["behind"] = f"{blk[0]} #{blk[1]}"
                 tracer.complete(f"fg/shard{self.shard_tag}", "stall",
-                                t0, dt, {"reason": reason})
+                                t0, dt, args)
+                if blk is not None and causal.current() is not None:
+                    # Causal flow arrow: blocking job's lane -> the
+                    # sampled op's request track.
+                    fid = tracer.next_flow_id()
+                    tracer.flow_start(blk[2], "blocked_by", blk[3], fid,
+                                      {"kind": blk[0], "job": blk[1]})
+                    tracer.flow_end(f"op/shard{self.shard_tag}",
+                                    "blocked_by", self.clock.now, fid,
+                                    {"reason": reason})
             guard += 1
             if guard > 100000:
                 raise RuntimeError("stall livelock")
@@ -475,10 +537,15 @@ class KVStore:
             self.sched.pump()
             self.stats_counters["gets"] += 1
             t0 = self.clock.now if self.obs.sampling else None
+            ctx = (self.obs.causal.start("get", self.shard_tag)
+                   if t0 is not None else None)
             e = self.get_entry(ukey, IOClass.USER_READ,
                                self._snap_bound(snapshot))
             if t0 is not None:
-                self._lat["get"].record(self.clock.now - t0)
+                lat = self.clock.now - t0
+                self._lat["get"].record(lat)
+                if ctx is not None:
+                    self._finish_ctx(ctx, "get", lat, t0)
             return e is not None and e[2] != VT_DELETE
 
     def get_present(self, ukey: bytes, *,
@@ -497,12 +564,17 @@ class KVStore:
             self.sched.pump()
             self.stats_counters["gets"] += 1
             t0 = self.clock.now if self.obs.sampling else None
+            ctx = (self.obs.causal.start("get", self.shard_tag)
+                   if t0 is not None else None)
             e = self.get_entry(ukey, IOClass.USER_READ,
                                self._snap_bound(snapshot))
             out = ((False, None) if e is None
                    else (True, self._resolve_value(e, IOClass.USER_READ)))
             if t0 is not None:
-                self._lat["get"].record(self.clock.now - t0)
+                lat = self.clock.now - t0
+                self._lat["get"].record(lat)
+                if ctx is not None:
+                    self._finish_ctx(ctx, "get", lat, t0)
             return out
 
     # -- MVCC snapshots + conditional writes -----------------------------
@@ -693,6 +765,8 @@ class KVStore:
             self.sched.pump()
             self.stats_counters["scans"] += 1
             t0 = self.clock.now if self.obs.sampling else None
+            ctx = (self.obs.causal.start("scan", self.shard_tag)
+                   if t0 is not None else None)
             out: List[Tuple[bytes, bytes]] = []
             prev: Optional[bytes] = None
             # Scan-window admission: blocks touched only by this sweep
@@ -715,7 +789,10 @@ class KVStore:
                     if len(out) >= count:
                         break
             if t0 is not None:
-                self._lat["scan"].record(self.clock.now - t0)
+                lat = self.clock.now - t0
+                self._lat["scan"].record(lat)
+                if ctx is not None:
+                    self._finish_ctx(ctx, "scan", lat, t0)
             return out
 
     def _level_stream(self, files: List[FileMeta], start: bytes,
@@ -924,10 +1001,15 @@ class KVStore:
         flushed_bytes = 0
 
         def _seal_v(hot: bool) -> None:
+            nonlocal flushed_bytes
             fid, w = vws[hot]
             if w is not None and w.num_entries:
-                vsst_metas.append(self.finish_vsst(w, IOClass.FLUSH,
-                                                   fid=fid, is_hot=hot))
+                meta = self.finish_vsst(w, IOClass.FLUSH, fid=fid,
+                                        is_hot=hot)
+                # Physical file size, not logical payload bytes — flush
+                # write-amp must equal the device's FLUSH-class bytes.
+                flushed_bytes += meta.file_size
+                vsst_metas.append(meta)
             vws[hot] = (None, None)
 
         def _vwriter(hot: bool):
@@ -966,7 +1048,6 @@ class KVStore:
                 hot = opts.dropcache and self.dropcache.is_hot(ukey)
                 vfid, vw = _vwriter(hot)
                 off, ln = vw.add(ukey, payload)
-                flushed_bytes += len(payload)
                 if opts.index_kind == "ka":
                     entry = (ukey, seq, VT_INDEX_KA,
                              encode_ka(vfid, off, ln, raw=len(payload)))
@@ -1012,7 +1093,9 @@ class KVStore:
             self.stats_counters["flushes"] += 1
             self.placement.note_flush(
                 sum(props["file_size"] for _, props in ksst_writers))
-            self.sched.note_bg_write(JOB_FLUSH, flushed_bytes)
+            # Write-amp attribution happens at the device per IOClass
+            # (exact by construction) — only the governor's flush-rate
+            # estimate is fed here.
             self.sched.note_flush(flushed_bytes, max(elapsed, 1e-9))
             self.after_background()
 
@@ -1088,14 +1171,24 @@ class KVStore:
 
     def metrics(self, *, sim_only: bool = False) -> Dict[str, object]:
         """Full observability snapshot: registry counter groups and
-        histograms plus the amplification ledger (per-source write-amp,
-        per-component space-amp, windowed series).  ``sim_only`` drops
-        wall-clock-derived series so two seeded runs compare equal."""
+        histograms (with causal exemplars) plus the amplification ledger
+        (per-source write-amp, per-component space-amp, windowed series),
+        the device's per-class I/O totals, and the shared cache's budget
+        accounting — everything the invariant auditor cross-checks.
+        ``sim_only`` drops wall-clock-derived series so two seeded runs
+        compare equal."""
         with self.sched.core.engine_lock:
             snap: Dict[str, object] = {"sim_time_s": self.clock.now}
             snap["registry"] = self.obs.snapshot(sim_only=sim_only)
             snap["amp"] = self.obs.ledger.snapshot()
+            snap["io"] = self.device.stats.snapshot()
+            snap["cache"] = self.cache.core.stats()
             return snap
+
+    def audit(self) -> "AuditReport":
+        """Run the conservation-law auditor over a fresh metrics
+        snapshot; ``.ok`` is False iff any invariant is violated."""
+        return audit_snapshot(self.metrics())
 
     def start_trace(self, recorder: Optional[TraceRecorder] = None
                     ) -> TraceRecorder:

@@ -27,7 +27,6 @@ from ..store.device import IOClass
 from ..store.format import (VT_INDEX_KA, VT_INDEX_KF, VT_VALUE, decode_ka,
                             decode_kf, encode_ka)
 from ..store.tables import LogTableWriter
-from .scheduler import JOB_GC
 from .version import VSSTMeta
 
 
@@ -154,7 +153,6 @@ def run_gc_titan(db, victim: VSSTMeta) -> Callable[[], None]:
         db.placement.note_gc(rewritten,
                              victim.total_value_bytes - rewritten
                              - reattached)
-        db.sched.note_bg_write(JOB_GC, rewritten)
         vs.log_and_apply({"add_vsst": new_metas, "del_vsst": [victim.fid]})
         db.drop_table(victim.fid)
         db.stats_counters["gc_runs"] += 1
@@ -286,7 +284,6 @@ def run_gc_terark(db, victim: VSSTMeta) -> Callable[[], None]:
         db.placement.note_gc(
             rewritten, victim.total_value_bytes - rewritten
             - reattached_bytes)
-        db.sched.note_bg_write(JOB_GC, rewritten)
         vs.log_and_apply(edit)
         db.drop_table(victim.fid)
         db.stats_counters["gc_runs"] += 1

@@ -138,6 +138,7 @@ class Options:
 
     # --- observability (repro.obs) ---------------------------------------
     obs_sampling: bool = False        # latency histograms on foreground ops
+    obs_sample_every: int = 64        # causal-trace 1-in-N op sampling rate
     obs_window_s: float = 0.5         # amplification-ledger window (sim s)
     obs_series_len: int = 256         # ledger ring-buffer length
 
@@ -163,6 +164,7 @@ class Options:
         assert self.bloom_bits_per_key >= 0
         assert self.obs_window_s > 0.0
         assert self.obs_series_len >= 1
+        assert self.obs_sample_every >= 1
         if self.index_kind == "ka":
             assert self.vsst_format == "log", "KA addressing implies log vSSTs"
         return self

@@ -440,6 +440,18 @@ class Rebalancer:
         store = self.store
         src = store.shards[src_id]
         dst = store.shards[dst_id]
+        # Deferred commits run outside run_job's attribution scope — tag
+        # the catch-up/cleanup writes as migration, not generic GC.
+        with src.device.attribute_gc_writes(JOB_MIGRATE):
+            self._commit_attributed(slot, src_id, dst_id, watermark,
+                                    flush_mark, seen)
+
+    def _commit_attributed(self, slot: int, src_id: int, dst_id: int,
+                           watermark: int, flush_mark: int,
+                           seen: Set[bytes]) -> None:
+        store = self.store
+        src = store.shards[src_id]
+        dst = store.shards[dst_id]
         # Catch-up: user writes routed to the source while the copy was in
         # flight (seq above the watermark).  Unless the source flushed in
         # the window they are still in its memtables — no device I/O.
@@ -514,9 +526,10 @@ class Rebalancer:
         cleanup already tombstoned are skipped) and mark it done."""
         store = self.store
         src = store.shards[src_id]
-        keys = [e[0] for e in slot_entries(src, slot, store.n_slots)
-                if e[2] != VT_DELETE]
-        self._cleanup(src, keys)
+        with src.device.attribute_gc_writes(JOB_MIGRATE):
+            keys = [e[0] for e in slot_entries(src, slot, store.n_slots)
+                    if e[2] != VT_DELETE]
+            self._cleanup(src, keys)
         store._append_superblock({"version": 2, "cleaned": store.epoch})
         self.counters["cleanups"] += 1
 
@@ -528,9 +541,10 @@ class Rebalancer:
         store = self.store
         if store.slot_map[slot] != dst_id:
             dst = store.shards[dst_id]
-            keys = [e[0] for e in slot_entries(dst, slot, store.n_slots)
-                    if e[2] != VT_DELETE]
-            self._cleanup(dst, keys)
+            with dst.device.attribute_gc_writes(JOB_MIGRATE):
+                keys = [e[0] for e in slot_entries(dst, slot, store.n_slots)
+                        if e[2] != VT_DELETE]
+                self._cleanup(dst, keys)
             self.counters["aborted_cleanups"] += 1
         store._append_superblock({"version": 2, "mig_abort": [slot, dst_id]})
 

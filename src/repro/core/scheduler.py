@@ -141,6 +141,13 @@ class SchedulerCore:
         # Observability: an active TraceRecorder (set by Store.trace())
         # sees job spans, commit rounds and governor decisions.
         self.tracer = None
+        # Deterministic job ids (causal chains and trace args name the
+        # blocking job as e.g. "compaction #412"), and the most recently
+        # completed job: (kind, job_id, lane track, end time).  A stalled
+        # writer reads the latter to learn *which* job's completion ended
+        # its wait.
+        self.job_seq = itertools.count(1)
+        self.last_completed: Optional[Tuple[str, int, str, float]] = None
         # Monotonic core counters live in the device's metrics registry
         # so a crash/recovery cycle on the same device keeps them.
         # WAL commit accounting: a group commit is *one* charged sync
@@ -369,20 +376,35 @@ class Scheduler:
         the body runs would corrupt the job duration."""
         core = self.core
         with core.engine_lock:
+            job_id = next(core.job_seq)
             core.active[kind] += 1
-            with JobClock(self.device) as jc:
-                effects = body()
+            # GC-class write bytes are attributed at the device to the
+            # dynamically-scoped owner; a migration's copies must not be
+            # booked as GC rewrite.
+            bg_owner = JOB_MIGRATE if kind == JOB_MIGRATE else JOB_GC
+            with self.device.attribute_gc_writes(bg_owner):
+                with JobClock(self.device) as jc:
+                    effects = body()
             lanes = core.flush_lanes if kind == JOB_FLUSH else core.bg_lanes
             lane, start, end = lanes.schedule(self.clock.now, jc.elapsed)
             elapsed = jc.elapsed
+            track = (f"flush-lane-{lane}" if kind == JOB_FLUSH
+                     else f"bg-lane-{lane}")
             if core.tracer is not None:
-                track = (f"flush-lane-{lane}" if kind == JOB_FLUSH
-                         else f"bg-lane-{lane}")
-                core.tracer.span(track, kind, start, end, trace_args)
+                args = dict(trace_args) if trace_args else {}
+                args["job"] = job_id
+                core.tracer.span(track, kind, start, end, args)
+            causal = self.device.metrics.causal
 
             def _complete() -> None:
                 core.active[kind] -= 1
-                effects(elapsed)
+                core.last_completed = (kind, job_id, track, end)
+                # Effects may run inside a *foreground* op's pump: the op
+                # pays for this job's bookkeeping I/O, so attribute those
+                # charges to interference by this job.
+                with self.device.attribute_gc_writes(bg_owner):
+                    with causal.interference(kind, job_id):
+                        effects(elapsed)
                 core.notify_waiters()
 
             core.push_event(end, _complete)

@@ -63,7 +63,7 @@ from typing import (Callable, Dict, Iterable, List, Optional,
 
 import msgpack
 
-from ..obs import TraceRecorder
+from ..obs import AuditReport, TraceRecorder, audit_snapshot
 from ..store.device import BlockDevice, Clock, CostModel, IOClass
 from ..store.format import VT_DELETE, VT_VALUE
 from .cache import SharedReadCache
@@ -811,14 +811,23 @@ class ShardedKVStore:
 
     def metrics(self, *, sim_only: bool = False) -> Dict[str, object]:
         """Registry + amplification-ledger snapshot for the whole store
-        (shards share the device's registry, so one call covers them).
+        (shards share the device's registry, so one call covers them),
+        plus the device's per-class I/O totals and the shared cache's
+        budget accounting — everything the invariant auditor cross-checks.
         ``sim_only`` drops wall-clock-derived series so two seeded runs
         compare equal."""
         with self.sched_core.engine_lock:
             snap: Dict[str, object] = {"sim_time_s": self.clock.now}
             snap["registry"] = self.obs.snapshot(sim_only=sim_only)
             snap["amp"] = self.obs.ledger.snapshot()
+            snap["io"] = self.device.stats.snapshot()
+            snap["cache"] = self.cache.stats()
             return snap
+
+    def audit(self) -> "AuditReport":
+        """Run the conservation-law auditor over a fresh metrics
+        snapshot; ``.ok`` is False iff any invariant is violated."""
+        return audit_snapshot(self.metrics())
 
     def start_trace(self, recorder: Optional[TraceRecorder] = None
                     ) -> TraceRecorder:

@@ -2,8 +2,10 @@
 
 Exit status 0 iff every file parses as Chrome trace-event JSON (bare
 array or ``{"traceEvents": [...]}``) with monotonic per-track
-timestamps and balanced B/E span pairs.  Used by CI on the bench-smoke
-trace artifact.
+timestamps, balanced B/E span pairs, paired causal flow events (every
+``s`` origin has an ``f`` terminus and vice versa), and strictly
+non-overlapping op spans on request (``op/...``) tracks.  Used by CI
+on the bench-smoke trace artifact.
 """
 
 from __future__ import annotations

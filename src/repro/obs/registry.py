@@ -24,6 +24,7 @@ from __future__ import annotations
 import math
 from typing import Dict, Iterable, List, Mapping, Optional
 
+from .causal import CausalTracer
 from .ledger import AmplificationLedger
 
 WALL_PREFIX = "wall/"
@@ -153,6 +154,10 @@ class MetricsRegistry:
         self._groups: Dict[str, CounterGroup] = {}
         self._hists: Dict[str, Histogram] = {}
         self.ledger = AmplificationLedger()
+        self.causal = CausalTracer()
+        # Exemplar buckets must align with Histogram buckets; injected
+        # here so causal.py stays free of intra-package imports.
+        self.causal.bucket_fn = Histogram.bucket_index
 
     # -- counters -----------------------------------------------------
     def counters(self, name: str,
@@ -185,9 +190,15 @@ class MetricsRegistry:
                       if not (sim_only and n.startswith(WALL_PREFIX)))
 
     def snapshot(self, *, sim_only: bool = False) -> Dict[str, object]:
+        hist_names = self._names(self._hists, sim_only)
         return {
             "counters": {n: dict(self._groups[n])
                          for n in self._names(self._groups, sim_only)},
             "histograms": {n: self._hists[n].snapshot()
-                           for n in self._names(self._hists, sim_only)},
+                           for n in hist_names},
+            # Causal exemplars hang off histogram names, so the same
+            # wall/ filter applies (sim-only snapshots stay free of
+            # wall-clock-derived series).
+            "exemplars": self.causal.snapshot(
+                self._names(self.causal.exemplars, sim_only)),
         }

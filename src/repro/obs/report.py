@@ -24,6 +24,71 @@ def _fmt_us(s: float) -> str:
     return f"{s * 1e6:.1f}us"
 
 
+def _tail_exemplar(hist: Dict, buckets: Dict) -> Dict:
+    """The exemplar record that best represents the histogram's p99:
+    closest latency at-or-above p99, falling back to closest below."""
+    p99 = hist.get("p99", 0.0)
+    best_key, best = None, None
+    for recs in buckets.values():
+        for rec in recs:
+            lat = rec.get("latency_s", 0.0)
+            key = (0 if lat >= p99 else 1, abs(lat - p99))
+            if best_key is None or key < best_key:
+                best_key, best = key, rec
+    return best
+
+
+def _blame(share: str, chain) -> str:
+    """Human tail for an attribution row: which background job (or
+    commit round / device hops) the dominant share sits behind."""
+    if share.startswith("stall_"):
+        for link in chain:
+            if link.get("kind") == "stall" and link.get("by_kind"):
+                return f"behind {link['by_kind']} #{link['by_job']}"
+        return ""
+    if share.startswith("interference_"):
+        for link in chain:
+            if link.get("kind") == "interference":
+                return f"behind {link['job_kind']} #{link['job']}"
+        return ""
+    if share == "device_read":
+        hops = sum(1 for link in chain if link.get("kind") == "device_hop")
+        return f"({hops} device hop{'s' if hops != 1 else ''})"
+    if share == "wal_sync":
+        for link in chain:
+            if link.get("kind") == "commit_round":
+                return (f"commit round csn={link['csn']} "
+                        f"({link['role']}, {link['records']} recs)")
+    return ""
+
+
+def render_attribution(reg: Dict, w) -> None:
+    """Per-histogram p99 attribution from sampled causal exemplars:
+    ``p99 shard0/put: 71% stall_l0 behind compaction #412``."""
+    exemplars = reg.get("exemplars") or {}
+    hists = reg.get("histograms", {})
+    rows = []
+    for name in sorted(exemplars):
+        hist = hists.get(name)
+        if not hist or not hist.get("count"):
+            continue
+        rec = _tail_exemplar(hist, exemplars[name])
+        if rec is None or not rec.get("shares"):
+            continue
+        share, dt = max(rec["shares"].items(), key=lambda kv: (kv[1], kv[0]))
+        lat = rec.get("latency_s", 0.0)
+        pct = 100.0 * dt / lat if lat > 0 else 0.0
+        label = f"shard{rec.get('shard', '?')}/{rec.get('op', '?')}"
+        blame = _blame(share, rec.get("chain", []))
+        rows.append(f"    p99 {label:<14} {_fmt_us(lat):>9}  "
+                    f"{pct:3.0f}% {share}"
+                    + (f"  {blame}" if blame else "") + "\n")
+    if rows:
+        w("  p99 attribution (sampled causal exemplars):\n")
+        for row in rows:
+            w(row)
+
+
 def render(snap: Dict, out=sys.stdout) -> None:
     w = out.write
     amp = snap.get("amp") or {}
@@ -54,6 +119,7 @@ def render(snap: Dict, out=sys.stdout) -> None:
             h = live[name]
             w(f"    {name:<28} {_fmt_us(h['p50']):>9} {_fmt_us(h['p95']):>9}"
               f" {_fmt_us(h['p99']):>9}  n={h['count']}\n")
+    render_attribution(reg, w)
     groups = reg.get("counters", {})
     if groups:
         w("  counters:\n")

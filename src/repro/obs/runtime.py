@@ -19,6 +19,10 @@ _trace_path: Optional[str] = None
 _metrics_path: Optional[str] = None
 _dbs: List[Tuple[str, object]] = []
 _recorders: List[TraceRecorder] = []
+# Every store built since the last take_sim_time() call, tracked even
+# when no sink is configured — the bench harness sums simulated time
+# per suite for its BENCH_<suite>.json trajectory records.
+_sim_dbs: List[object] = []
 
 
 def configure(trace: Optional[str] = None,
@@ -34,8 +38,18 @@ def active() -> bool:
     return bool(_trace_path or _metrics_path)
 
 
+def take_sim_time() -> float:
+    """Total simulated seconds across stores built since the last call
+    (each store's clock ends at its total simulated runtime)."""
+    global _sim_dbs
+    total = sum(db.clock.now for db in _sim_dbs)
+    _sim_dbs = []
+    return total
+
+
 def attach(db, label: str) -> None:
     """Register a freshly built store with the configured sinks."""
+    _sim_dbs.append(db)
     if not active():
         return
     label = f"{label}#{len(_dbs)}"
@@ -72,4 +86,4 @@ def flush() -> List[str]:
     return written
 
 
-__all__ = ["configure", "active", "attach", "flush"]
+__all__ = ["configure", "active", "attach", "flush", "take_sim_time"]

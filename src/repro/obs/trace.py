@@ -10,6 +10,9 @@ understood by Perfetto and ``chrome://tracing``:
   begin and end of an enclosing job body);
 * ``i`` instant events — GC-governor bandwidth decisions, placement
   retunes, rebalancer migration lifecycle;
+* ``s``/``f`` flow events — causal arrows from the background job that
+  blocked a foreground op to the op's stall (Perfetto draws these as
+  arrows between tracks, answering "who delayed this put" visually);
 * ``M`` metadata — process/thread names for the track labels.
 
 Timestamps are the shared *simulated* clock in microseconds, so two
@@ -34,6 +37,7 @@ class TraceRecorder:
             "args": {"name": process_name},
         }]
         self._tids: Dict[str, int] = {}
+        self._next_flow = 1
 
     def _tid(self, track: str) -> int:
         tid = self._tids.get(track)
@@ -87,6 +91,35 @@ class TraceRecorder:
             ev["args"] = args
         self.events.append(ev)
 
+    # -- flow events (causal arrows between tracks) -------------------
+    def next_flow_id(self) -> int:
+        """Flow ids bind globally in the Chrome trace format, and bench
+        runs merge several recorders into one file — namespace by pid so
+        merged traces keep ids unique."""
+        fid = self.pid * 1_000_000 + self._next_flow
+        self._next_flow += 1
+        return fid
+
+    def flow_start(self, track: str, name: str, ts: float,
+                   flow_id: int, args: Optional[dict] = None) -> None:
+        """Flow origin (``s``), anchored on the *cause's* track."""
+        ev = {"ph": "s", "cat": "causal", "name": name, "id": flow_id,
+              "pid": self.pid, "tid": self._tid(track), "ts": self._ts(ts)}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def flow_end(self, track: str, name: str, ts: float,
+                 flow_id: int, args: Optional[dict] = None) -> None:
+        """Flow terminus (``f``), anchored on the *victim's* track;
+        ``bt: "e"`` binds to the enclosing slice."""
+        ev = {"ph": "f", "bt": "e", "cat": "causal", "name": name,
+              "id": flow_id, "pid": self.pid, "tid": self._tid(track),
+              "ts": self._ts(ts)}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
     # -- output -------------------------------------------------------
     def sorted_events(self) -> List[dict]:
         """Metadata first, then events stable-sorted by timestamp.
@@ -107,11 +140,27 @@ def lint_events(events: List[dict]) -> List[str]:
 
     Checks: required fields per phase, non-negative numeric timestamps,
     per-track (pid, tid) timestamp monotonicity, ``X`` durations >= 0,
-    and balanced, properly nested ``B``/``E`` pairs per track.
+    balanced and properly nested ``B``/``E`` pairs per track, flow-event
+    pairing (every flow id must have both an ``s`` origin and an ``f``
+    terminus, with the terminus not preceding the origin), and strict
+    span nesting on request tracks: ``op/...`` tracks carry one op at a
+    time, so two overlapping ``X`` spans there are an error.
     """
     errors: List[str] = []
+    # Pre-pass: thread names, so the main pass can tell request tracks
+    # apart regardless of where the M records sit in the stream.
+    tnames: Dict[Tuple[int, int], str] = {}
+    for ev in events:
+        if (isinstance(ev, dict) and ev.get("ph") == "M"
+                and ev.get("name") == "thread_name"):
+            name = (ev.get("args") or {}).get("name")
+            if isinstance(name, str):
+                tnames[(ev.get("pid"), ev.get("tid"))] = name
     last_ts: Dict[Tuple[int, int], float] = {}
     stacks: Dict[Tuple[int, int], List[str]] = {}
+    op_span_end: Dict[Tuple[int, int], float] = {}
+    flow_s: Dict[object, float] = {}
+    flow_f: Dict[object, float] = {}
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
             errors.append(f"event {i}: not an object")
@@ -151,12 +200,45 @@ def lint_events(events: List[dict]) -> List[str]:
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 errors.append(f"event {i}: X with bad dur {dur!r}")
+            elif tnames.get(key, "").startswith("op/"):
+                # Request tracks serialize ops: spans must not overlap.
+                prev_end = op_span_end.get(key)
+                if prev_end is not None and ts < prev_end - 1e-6:
+                    errors.append(
+                        f"event {i}: X {ev.get('name')!r} at {ts} overlaps "
+                        f"previous span ending {prev_end} on op track {key}")
+                end = ts + dur
+                if prev_end is None or end > prev_end:
+                    op_span_end[key] = end
+        elif ph in ("s", "t", "f"):
+            fid = ev.get("id")
+            if fid is None:
+                errors.append(f"event {i}: flow {ph!r} without id")
+            elif ph == "s":
+                if fid in flow_s:
+                    errors.append(f"event {i}: duplicate flow start id "
+                                  f"{fid!r}")
+                flow_s.setdefault(fid, ts)
+            elif ph == "f":
+                if fid in flow_f:
+                    errors.append(f"event {i}: duplicate flow end id "
+                                  f"{fid!r}")
+                flow_f.setdefault(fid, ts)
         elif ph not in ("i", "I", "C", "N", "O", "D"):
             errors.append(f"event {i}: unknown phase {ph!r}")
     for key, stack in stacks.items():
         if stack:
             errors.append(f"track {key}: {len(stack)} unclosed B "
                           f"event(s), first {stack[0]!r}")
+    for fid, ts in flow_s.items():
+        if fid not in flow_f:
+            errors.append(f"flow {fid!r}: start without end")
+        elif flow_f[fid] < ts:
+            errors.append(f"flow {fid!r}: end ts {flow_f[fid]} precedes "
+                          f"start ts {ts}")
+    for fid in flow_f:
+        if fid not in flow_s:
+            errors.append(f"flow {fid!r}: end without start")
     return errors
 
 

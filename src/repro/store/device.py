@@ -211,6 +211,16 @@ class BlockDevice:
         # an active TraceRecorder sees every charged I/O as an X event.
         self.metrics = MetricsRegistry()
         self.tracer = None
+        # Background write bytes are attributed centrally here, per I/O
+        # class, so the amplification ledger's write sources equal the
+        # device's class totals *by construction* (the audit relies on
+        # this).  GC-class writes are shared between the GC and the
+        # rebalancer; the current owner is a dynamically-scoped tag.
+        self._bg_write = self.metrics.counters(
+            "core/bg_write_bytes",
+            {"flush": 0, "compaction": 0, "gc": 0, "migrate": 0})
+        self.gc_write_attr = "gc"
+        self._discard_stats = False
         self._files: Dict[int, bytearray] = {}
         self._next_id = 1
         self.gc_read_limiter: Optional[RateLimiter] = None
@@ -271,7 +281,17 @@ class BlockDevice:
         if cls.is_gc and self.gc_write_limiter is not None:
             dt += self.gc_write_limiter.charge(len(data))
         self.stats.add(cls, len(data), dt)
+        if not self._discard_stats:
+            if cls is IOClass.FLUSH:
+                self._bg_write["flush"] += len(data)
+            elif cls is IOClass.COMPACTION_WRITE:
+                self._bg_write["compaction"] += len(data)
+            elif cls is IOClass.GC_WRITE or cls is IOClass.GC_WRITE_INDEX:
+                attr = self.gc_write_attr
+                self._bg_write[attr] = self._bg_write.get(attr, 0) + len(data)
         if self.charge_time:
+            if self.clock.sink is None and self.metrics.causal.depth:
+                self.metrics.causal.on_io(cls.value, True, len(data), dt, fid)
             if self.tracer is not None:
                 self.tracer.complete(f"io/{cls.name.lower()}", "write",
                                      self.clock.now, dt,
@@ -287,6 +307,9 @@ class BlockDevice:
             dt += self.gc_read_limiter.charge(len(data))
         self.stats.add(cls, len(data), dt)
         if self.charge_time:
+            if self.clock.sink is None and self.metrics.causal.depth:
+                self.metrics.causal.on_io(cls.value, False, len(data), dt,
+                                          fid)
             if self.tracer is not None:
                 self.tracer.complete(f"io/{cls.name.lower()}", "read",
                                      self.clock.now, dt,
@@ -299,7 +322,21 @@ class BlockDevice:
 
     def charge_cpu(self, n_ops: int = 1) -> None:
         if self.charge_time:
-            self.clock.advance(self.cost.cpu_op_s * n_ops)
+            dt = self.cost.cpu_op_s * n_ops
+            if self.clock.sink is None and self.metrics.causal.depth:
+                self.metrics.causal.on_cpu(dt)
+            self.clock.advance(dt)
+
+    @contextmanager
+    def attribute_gc_writes(self, kind: str):
+        """Dynamically scope the owner of GC-class write bytes ("gc" or
+        "migrate") for background-write attribution."""
+        prev = self.gc_write_attr
+        self.gc_write_attr = kind
+        try:
+            yield
+        finally:
+            self.gc_write_attr = prev
 
     @contextmanager
     def uncharged(self):
@@ -308,10 +345,12 @@ class BlockDevice:
         saved_ct, saved_stats = self.charge_time, self.stats
         self.charge_time = False
         self.stats = IOStats()          # discard
+        self._discard_stats = True
         try:
             yield
         finally:
             self.charge_time, self.stats = saved_ct, saved_stats
+            self._discard_stats = False
 
     @contextmanager
     def time_free(self):

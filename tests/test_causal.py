@@ -1,0 +1,417 @@
+"""Causal tracing, tail-latency attribution, the invariant auditor, and
+the report CLI's attribution section (repro.obs.causal / audit / report).
+
+Covers the PR's acceptance gates: sampled exemplars whose shares sum to
+the measured latency and whose tail records carry a complete causal
+chain; byte-identical ``metrics(sim_only=True)`` across two same-seed
+*threaded* runs with every ``wall/``-prefixed series excluded; a clean
+audit on seeded runs while a deliberately mis-accounted counter is
+caught; flow-event pairing and op-track nesting in the trace lint; and
+the attribution table in ``repro.obs.report``.
+"""
+
+import importlib.util
+import io
+import json
+import os
+import random
+import re
+import threading
+
+import pytest
+
+from repro.core import KVStore, ShardedKVStore, preset
+from repro.obs import AuditReport, audit_snapshot, lint_events
+from repro.obs.report import render
+
+
+def _workload(db, n=600, seed=42):
+    rng = random.Random(seed)
+    for i in range(n):
+        k = b"k%05d" % rng.randint(0, n // 2)
+        r = rng.random()
+        if r < 0.70:
+            db.put(k, b"v" * rng.choice([64, 300, 2000, 6000]))
+        elif r < 0.90:
+            db.get(k)
+        else:
+            db.delete(k)
+    db.scan(b"k", 40)
+
+
+def _sampled_db(**over):
+    over.setdefault("obs_sample_every", 4)
+    opts = preset("scavenger_plus", obs_sampling=True, **over)
+    return KVStore(opts)
+
+
+def _all_exemplars(metrics):
+    for name, buckets in metrics["registry"]["exemplars"].items():
+        for recs in buckets.values():
+            for rec in recs:
+                yield name, rec
+
+
+def _tail_exemplar(metrics, hist_name):
+    """The exemplar closest to (at or above) the histogram's p99."""
+    hist = metrics["registry"]["histograms"][hist_name]
+    p99 = hist["p99"]
+    best_key, best = None, None
+    for recs in metrics["registry"]["exemplars"][hist_name].values():
+        for rec in recs:
+            lat = rec["latency_s"]
+            key = (0 if lat >= p99 else 1, abs(lat - p99))
+            if best_key is None or key < best_key:
+                best_key, best = key, rec
+    return best
+
+
+# ---------------------------------------------------------------------------
+# exemplar shares + causal chains
+# ---------------------------------------------------------------------------
+
+def test_exemplar_shares_sum_to_latency():
+    db = _sampled_db()
+    _workload(db)
+    db.drain()
+    m = db.metrics()
+    count = 0
+    for name, rec in _all_exemplars(m):
+        total = sum(rec["shares"].values())
+        assert total == pytest.approx(
+            rec["latency_s"], rel=0.01, abs=1e-12), (name, rec)
+        assert all(v >= 0.0 for v in rec["shares"].values())
+        count += 1
+    assert count > 5            # sampling actually produced exemplars
+
+
+def test_tail_exemplars_carry_complete_chains():
+    # YCSB-C-shaped tail: a write-heavy warmup then a read phase, so
+    # both put and get tails exist; every sampled tail exemplar must
+    # explain itself (commit round for writes, device hops or an
+    # explicit stall/interference link for the rest).
+    db = _sampled_db()
+    _workload(db, n=800, seed=17)
+    db.drain()
+    rng = random.Random(18)
+    for _ in range(400):
+        db.get(b"k%05d" % rng.randint(0, 400))
+    m = db.metrics()
+    hists = [n for n in m["registry"]["exemplars"]
+             if m["registry"]["histograms"][n]["count"]]
+    assert any(n.endswith("/put") for n in hists)
+    assert any(n.endswith("/get") for n in hists)
+    for name in hists:
+        rec = _tail_exemplar(m, name)
+        assert rec is not None, name
+        if name.endswith(("/put", "/delete")):
+            kinds = [c["kind"] for c in rec["chain"]]
+            assert "commit_round" in kinds, (name, rec)
+            round_ = next(c for c in rec["chain"]
+                          if c["kind"] == "commit_round")
+            assert round_["role"] in ("leader", "follower")
+            assert round_["csn"] >= 1 and round_["records"] >= 1
+        if name.endswith("/get") and "device_read" in rec["shares"]:
+            assert any(c["kind"] == "device_hop" for c in rec["chain"]), rec
+
+
+def test_stall_exemplar_names_blocking_job():
+    # Tiny memtables + one flush lane force admission stalls; the stall
+    # share must dominate some exemplar and its chain must name the
+    # background job whose completion released the op.
+    db = _sampled_db(memtable_bytes=16 * 1024, l0_slowdown=2, l0_stop=3,
+                     flush_lanes=1, obs_sample_every=2)
+    rng = random.Random(7)
+    for i in range(600):
+        db.put(b"k%05d" % rng.randint(0, 300),
+               b"v" * rng.choice([200, 2000, 6000]))
+    db.drain()
+    m = db.metrics()
+    stalled = [rec for _, rec in _all_exemplars(m)
+               if any(s.startswith("stall_") for s in rec["shares"])]
+    assert stalled
+    linked = [rec for rec in stalled
+              for link in rec["chain"]
+              if link["kind"] == "stall" and link["by_kind"] is not None]
+    assert linked                # at least one wait ended by a known job
+    link = next(c for c in linked[0]["chain"] if c["kind"] == "stall")
+    assert link["by_kind"] in ("flush", "compaction", "gc", "migrate")
+    assert isinstance(link["by_job"], int) and link["by_job"] >= 1
+
+
+def test_sampling_rate_knob():
+    a = _sampled_db(obs_sample_every=1)
+    b = _sampled_db(obs_sample_every=1000)
+    for db in (a, b):
+        _workload(db, n=120, seed=5)
+    n_a = sum(1 for _ in _all_exemplars(a.metrics()))
+    n_b = sum(1 for _ in _all_exemplars(b.metrics()))
+    assert n_a > n_b             # denser sampling keeps more exemplars
+    assert n_b >= 1              # op 0 of each shard is always sampled
+
+
+# ---------------------------------------------------------------------------
+# determinism: threaded same-seed runs, wall/ exclusion
+# ---------------------------------------------------------------------------
+
+def _threaded_run():
+    """Two client threads in deterministic lock-step (ping-pong on
+    Events) driving write_batch/multi_get through the concurrent
+    front-end — real thread interleaving over the engine lock, but a
+    reproducible op order."""
+    opts = preset("scavenger_plus", obs_sampling=True, obs_sample_every=4)
+    db = ShardedKVStore(opts, n_shards=2)
+    turn = [threading.Event(), threading.Event()]
+    turn[0].set()
+    rounds = 30
+
+    def client(idx):
+        rng = random.Random(100 + idx)
+        for r in range(rounds):
+            turn[idx].wait()
+            turn[idx].clear()
+            batch = [("put", b"t%d-%05d" % (idx, rng.randint(0, 200)),
+                      b"v" * rng.choice([100, 1500, 4000]))
+                     for _ in range(8)]
+            db.write_batch(batch)
+            db.multi_get([b"t%d-%05d" % (idx, rng.randint(0, 200))
+                          for _ in range(4)])
+            turn[1 - idx].set()
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    db.drain()
+    return db
+
+
+def test_threaded_same_seed_snapshots_byte_identical():
+    a, b = _threaded_run(), _threaded_run()
+    sa = a.metrics(sim_only=True)
+    sb = b.metrics(sim_only=True)
+    assert json.dumps(sa, sort_keys=True) == json.dumps(sb, sort_keys=True)
+
+
+def test_sim_only_excludes_all_wall_series():
+    db = _threaded_run()
+    full = db.metrics()
+    sim = db.metrics(sim_only=True)
+    reg = full["registry"]
+    # the threaded commit pipeline produced wall-clock series...
+    assert any(n.startswith("wall/") for n in reg["histograms"]), \
+        "expected a wall/ histogram in the full snapshot"
+    assert any(n.startswith("wall/") for n in reg["counters"])
+    # ...and sim_only drops every one of them, in every section
+    for section in ("counters", "histograms", "exemplars"):
+        assert not [n for n in sim["registry"][section]
+                    if n.startswith("wall/")], section
+
+
+# ---------------------------------------------------------------------------
+# invariant auditor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_audit_clean_on_seeded_run(sharded):
+    opts = preset("scavenger_plus", obs_sampling=True, obs_sample_every=4)
+    db = (ShardedKVStore(opts, n_shards=2) if sharded else KVStore(opts))
+    _workload(db, n=700, seed=3)
+    db.drain()
+    rep = db.audit()
+    assert isinstance(rep, AuditReport)
+    assert rep.ok, [str(v) for v in rep.violations]
+
+
+def test_audit_catches_injected_accounting_bug():
+    db = _sampled_db()
+    _workload(db, n=300, seed=3)
+    db.drain()
+    assert db.audit().ok
+    # Inflate the flush source without any device bytes behind it — the
+    # legacy attribution API is exactly the mis-accounting the
+    # device-centralized bookkeeping exists to prevent.
+    db.sched.note_bg_write("flush", 1 << 20)
+    rep = db.audit()
+    assert not rep.ok
+    assert any(v.rule == "flush-bytes" for v in rep.violations), \
+        [str(v) for v in rep.violations]
+
+
+def test_audit_catches_tampered_snapshot():
+    db = _sampled_db()
+    _workload(db, n=300, seed=3)
+    db.drain()
+    snap = db.metrics()
+    name, buckets = next(iter(snap["registry"]["exemplars"].items()))
+    rec = next(iter(buckets.values()))[0]
+    rec["shares"]["other"] = rec["shares"].get("other", 0.0) \
+        + rec["latency_s"]          # shares now overshoot the latency
+    rep = AuditReport()
+    audit_snapshot(snap, "tampered", rep)
+    assert any(v.rule == "exemplar-shares" for v in rep.violations)
+
+
+def test_audit_cli_roundtrip(tmp_path):
+    from repro.obs.audit import main as audit_main
+    db = _sampled_db()
+    _workload(db, n=300, seed=3)
+    db.drain()
+    path = tmp_path / "m.json"
+    path.write_text(json.dumps({"run": db.metrics()}))
+    assert audit_main([str(path)]) == 0
+    doc = json.loads(path.read_text())
+    doc["run"]["amp"]["write_bytes"]["gc"] += 999999
+    path.write_text(json.dumps(doc))
+    assert audit_main([str(path)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# trace lint: flow pairing + op-track nesting
+# ---------------------------------------------------------------------------
+
+def _meta(pid, tid, name):
+    return {"ph": "M", "pid": pid, "tid": tid, "name": "thread_name",
+            "args": {"name": name}}
+
+
+def _x(pid, tid, ts, dur, name="op"):
+    return {"ph": "X", "pid": pid, "tid": tid, "ts": ts, "dur": dur,
+            "name": name}
+
+
+def test_lint_flow_pairing():
+    s = {"ph": "s", "pid": 1, "tid": 1, "ts": 10.0, "id": 7,
+         "name": "blocked_by", "cat": "causal"}
+    f = {"ph": "f", "bt": "e", "pid": 1, "tid": 2, "ts": 11.0, "id": 7,
+         "name": "blocked_by", "cat": "causal"}
+    assert lint_events([s, f]) == []
+    assert any("start without end" in e for e in lint_events([s]))
+    assert any("end without start" in e for e in lint_events([f]))
+    late_f = dict(f, ts=9.0)
+    assert any("precedes" in e for e in lint_events([s, late_f]))
+    assert any("duplicate" in e for e in lint_events([s, dict(s), f]))
+
+
+def test_lint_op_track_span_nesting():
+    meta = _meta(1, 5, "op/shard0")
+    ok = [meta, _x(1, 5, 0.0, 5.0), _x(1, 5, 5.0, 3.0)]
+    assert lint_events(ok) == []
+    overlap = [meta, _x(1, 5, 0.0, 5.0), _x(1, 5, 2.0, 3.0)]
+    assert any("overlaps" in e for e in lint_events(overlap))
+    # non-request tracks (device, lanes) may overlap freely
+    free = [_meta(1, 6, "bg-lane-0"), _x(1, 6, 0.0, 5.0), _x(1, 6, 2.0, 3.0)]
+    assert lint_events(free) == []
+
+
+def test_live_trace_flows_pair_and_lint_clean():
+    opts = preset("scavenger_plus", obs_sampling=True, obs_sample_every=2,
+                  memtable_bytes=16 * 1024, l0_slowdown=2, l0_stop=3,
+                  flush_lanes=1)
+    db = KVStore(opts)
+    rec = db.start_trace()
+    rng = random.Random(7)
+    for i in range(500):
+        db.put(b"k%05d" % rng.randint(0, 250),
+               b"v" * rng.choice([200, 2000, 6000]))
+    db.drain()
+    db.stop_trace()
+    events = rec.sorted_events()
+    assert lint_events(events) == []
+    starts = [e for e in events if e.get("ph") == "s"]
+    ends = [e for e in events if e.get("ph") == "f"]
+    assert starts and len(starts) == len(ends)
+    # arrows land on a sampled-op request track
+    tracks = {(e["pid"], e["tid"]): (e.get("args") or {}).get("name")
+              for e in events if e.get("ph") == "M"}
+    for e in ends:
+        assert tracks[(e["pid"], e["tid"])].startswith("op/shard")
+
+
+# ---------------------------------------------------------------------------
+# report CLI: attribution section
+# ---------------------------------------------------------------------------
+
+def test_report_renders_attribution_table():
+    db = _sampled_db(memtable_bytes=16 * 1024, l0_slowdown=2, l0_stop=3,
+                     flush_lanes=1, obs_sample_every=2)
+    rng = random.Random(7)
+    for i in range(600):
+        db.put(b"k%05d" % rng.randint(0, 300),
+               b"v" * rng.choice([200, 2000, 6000]))
+        if i % 5 == 0:
+            db.get(b"k%05d" % rng.randint(0, 300))
+    db.drain()
+    out = io.StringIO()
+    render(db.metrics(), out=out)
+    text = out.getvalue()
+    assert "p99 attribution (sampled causal exemplars):" in text
+    # a put row attributes its tail and names the blocking job:
+    #   "p99 shard0/put  1401.9us  71% stall_l0  behind flush #412"
+    m = re.search(r"p99 shard0/put\s+[\d.]+us\s+(\d+)% (\w+)", text)
+    assert m, text
+    assert 0 < int(m.group(1)) <= 100
+    if m.group(2).startswith("stall_"):
+        assert re.search(r"p99 shard0/put.*behind \w+ #\d+", text), text
+
+
+def test_report_attribution_golden_shape():
+    # Pin the row format on a hand-built snapshot so the CLI contract
+    # (share %, dominant-share name, blocking job) cannot drift silently.
+    snap = {
+        "registry": {
+            "histograms": {
+                "shard0/latency/put": {
+                    "count": 100, "p50": 1e-4, "p95": 9e-4, "p99": 1e-3,
+                    "sum": 0.02, "min": 1e-5, "max": 2e-3, "buckets": {}},
+            },
+            "counters": {},
+            "exemplars": {
+                "shard0/latency/put": {"0": [{
+                    "op": "put", "shard": 0, "seq": 412,
+                    "latency_s": 1e-3,
+                    "shares": {"stall_l0": 7.1e-4, "wal_sync": 2.9e-4},
+                    "chain": [{"kind": "stall", "cause": "l0",
+                               "by_kind": "compaction", "by_job": 412}],
+                }]},
+            },
+        },
+    }
+    out = io.StringIO()
+    render(snap, out=out)
+    line = next(ln for ln in out.getvalue().splitlines()
+                if "p99 shard0/put" in ln)
+    assert "1000.0us" in line
+    assert "71% stall_l0" in line
+    assert "behind compaction #412" in line
+
+
+# ---------------------------------------------------------------------------
+# bench trajectory records (BENCH_<suite>.json)
+# ---------------------------------------------------------------------------
+
+def test_bench_record_writer(tmp_path):
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "benchmarks", "run.py")
+    spec = importlib.util.spec_from_file_location("bench_run", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    p = mod.write_bench_record(
+        str(tmp_path), "ycsb", ["ycsb/a,12.5,3.1kops/s", "noderived"],
+        wall_s=1.2345, sim_s=0.5, config={"fast": True})
+    rec = json.loads(open(p).read())
+    assert os.path.basename(p) == "BENCH_ycsb.json"
+    assert rec["suite"] == "ycsb" and rec["schema"] == mod.BENCH_SCHEMA
+    assert rec["rows"][0] == {"name": "ycsb/a", "us_per_call": 12.5,
+                              "derived": "3.1kops/s"}
+    assert rec["rows"][1]["us_per_call"] == 0.0
+    assert rec["wall_seconds"] == 1.234    # rounded
+    assert rec["sim_seconds"] == 0.5
+    # same config -> same hash; different config -> different hash
+    p2 = mod.write_bench_record(str(tmp_path), "ycsb", [], 0.0, 0.0,
+                                {"fast": True})
+    assert json.loads(open(p2).read())["config_hash"] == rec["config_hash"]
+    p3 = mod.write_bench_record(str(tmp_path), "ycsb", [], 0.0, 0.0,
+                                {"fast": False})
+    assert json.loads(open(p3).read())["config_hash"] != rec["config_hash"]
